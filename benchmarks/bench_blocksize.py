@@ -1,0 +1,48 @@
+"""Paper Fig. 3c: runtime vs block size.
+
+The paper tunes the Spark block size p (their optimum: smallest block the
+resource budget allows; too large hurts I/O overlap).  The TPU analogue is
+the Pallas tile shape (bm, bk, bn): VMEM residency and MXU utilization vs
+HBM streaming granularity.  On CPU (interpret mode) we measure the kernel
+wall-time trend and ALSO report the structural metric that matters on TPU:
+VMEM bytes per tile (must fit ~16 MiB with double buffering).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def run(n: int = 512, out=print):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32))
+
+    for tile in (32, 64, 128, 256):
+        fn = lambda: ops.block_matmul(a, b, bm=tile, bk=tile, bn=tile)
+        o = fn()
+        o.block_until_ready()  # compile
+        t0 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            fn().block_until_ready()
+        dt = (time.perf_counter() - t0) / reps
+        # VMEM model: A + B tiles (fp32 here; bf16 on TPU) + fp32 acc + out
+        vmem = (tile * tile * 4) * 2 + tile * tile * 4 * 2
+        grid = (n // tile) ** 3
+        out(
+            f"bench_blocksize,tile={tile},us_per_call={dt*1e6:.0f},"
+            f"vmem_kib_per_tile={vmem//1024},grid_cells={grid}"
+        )
+    out("bench_blocksize,note,TPU target: largest MXU-aligned tile whose "
+        "working set fits VMEM with double buffering (256 for bf16)")
+
+
+if __name__ == "__main__":
+    run()

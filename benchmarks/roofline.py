@@ -1,0 +1,108 @@
+"""Roofline report: reads experiments/dryrun/*.json, emits the three-term
+table per (arch x shape x mesh).
+
+    compute    = dot_flops_per_device / peak_flops          [s]
+    memory     = hbm_bytes_per_device / hbm_bw              [s]
+    collective = collective_bytes_per_device / ici_bw       [s]
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.  dot_flops and collective bytes are trip-count-corrected from the
+compiled HLO (launch/hlo_analysis.py); HLO "bytes accessed" is XLA's
+uncorrected estimate, so the memory term uses max(raw, params+activations
+model) -- see EXPERIMENTS.md for the derivation per cell.
+
+MODEL_FLOPS uses 6*N*D (dense) / 6*N_active*D (MoE) for train,
+2*N(_active)*D for inference; the ratio MODEL/HLO flags remat/redundancy.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+# active params for MoE archs (top-k experts + shared + attention + embed)
+ACTIVE_PARAMS = {
+    "llama4-maverick-400b-a17b": 17.2e9,
+    "granite-moe-3b-a800m": 0.94e9,  # 8/40 experts + attn + embed
+}
+
+
+def load_records(dryrun_dir=None):
+    d = dryrun_dir or DRYRUN_DIR
+    recs = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("status") == "ok":
+            recs.append(r)
+    return recs
+
+
+def roofline_row(r: dict) -> dict:
+    chips = r["chips"]
+    ana = r["hlo_analysis"]
+    flops_dev = ana["dot_flops"]  # already per-device (post-SPMD module)
+    coll_dev = ana["collective_total_bytes"]
+    raw_bytes = r["cost_analysis_raw"].get("bytes_accessed", 0.0)
+
+    n = r["n_params"]
+    n_active = ACTIVE_PARAMS.get(r["arch"], n)
+    tokens = r["global_batch"] * (r["seq_len"] if r["kind"] == "train" else 1)
+    if r["kind"] == "train":
+        model_flops = 6.0 * n_active * r["global_batch"] * r["seq_len"]
+    elif r["kind"] == "prefill":
+        model_flops = 2.0 * n_active * r["global_batch"] * r["seq_len"]
+    else:  # decode: one token per sequence
+        model_flops = 2.0 * n_active * r["global_batch"]
+
+    # memory term: HLO bytes-accessed is while-body-once; floor it with the
+    # structural minimum (params read once + grads/opt write for train)
+    param_bytes = n * (2 if "bf16" in str(r.get("arch")) else 4)  # coarse
+    mem_bytes = max(raw_bytes, param_bytes / chips)
+
+    t_comp = flops_dev / PEAK_FLOPS
+    t_mem = mem_bytes / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    dominant = max((t_comp, "compute"), (t_mem, "memory"), (t_coll, "collective"))[1]
+    useful = model_flops / chips / max(flops_dev, 1.0)
+    return {
+        "arch": r["arch"],
+        "shape": r["shape"],
+        "mesh": "x".join(str(v) for v in r["mesh"].values()),
+        "chips": chips,
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_dev": flops_dev,
+        "useful_ratio": useful,
+        "roofline_frac": useful * min(1.0, t_comp / max(t_comp, t_mem, t_coll)),
+    }
+
+
+def run(out=print, dryrun_dir=None):
+    recs = load_records(dryrun_dir)
+    if not recs:
+        out("bench_roofline,no_dryrun_records,run launch/dryrun.py first")
+        return []
+    rows = [roofline_row(r) for r in recs]
+    out("bench_roofline,arch,shape,mesh,t_comp_ms,t_mem_ms,t_coll_ms,dominant,useful_ratio")
+    for w in rows:
+        out(
+            f"bench_roofline,{w['arch']},{w['shape']},{w['mesh']},"
+            f"{w['t_compute_s']*1e3:.2f},{w['t_memory_s']*1e3:.2f},"
+            f"{w['t_collective_s']*1e3:.2f},{w['dominant']},{w['useful_ratio']:.3f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

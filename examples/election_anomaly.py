@@ -1,0 +1,71 @@
+"""Paper section 5.2: donation-shift anomalies in a bipartite-affinity graph.
+
+The FEC donor data is not shipped; this synthesizes the paper's setting:
+donors give to parties in two phases; the graph connects donors supporting
+the same party with weight = min(donation) (the paper's first setting, or
+log-scale for the second).  Injected anomaly: a block of donors shifts
+support between phases -- CADDeLaG should rank exactly those donors highest,
+which tuple-level analysis (total amounts barely change) cannot see.
+
+    PYTHONPATH=src python examples/election_anomaly.py [--n 192]
+"""
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CommuteConfig, detect_anomalies, trivial_context
+from repro.core.distmatrix import build_from_nodes
+
+
+def donation_graph(ctx, party, amount, *, log_scale=True):
+    """A[i,j] = min(a_i, a_j) if same party else 0 (paper's edge rule)."""
+    feats = jnp.stack([party.astype(np.float32), amount.astype(np.float32)], 1)
+
+    def kern(xi, xj):
+        same = (xi[:, None, 0] == xj[None, :, 0]).astype(jnp.float32)
+        m = jnp.minimum(xi[:, None, 1], xj[None, :, 1])
+        w = jnp.log1p(m) if log_scale else m
+        return same * w
+
+    return build_from_nodes(ctx, feats, kern)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=192)
+    ap.add_argument("--shift-frac", type=float, default=0.08)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    n = args.n
+    party1 = rng.integers(0, 3, n)  # D / R / other
+    amount1 = np.exp(rng.normal(5, 1.5, n))  # log-normal donations
+    # phase 2: a small block of donors flips party; amounts drift a little
+    n_shift = max(1, int(args.shift_frac * n))
+    shifters = rng.choice(n, n_shift, replace=False)
+    party2 = party1.copy()
+    party2[shifters] = (party1[shifters] + 1 + rng.integers(0, 2, n_shift)) % 3
+    amount2 = amount1 * np.exp(rng.normal(0, 0.1, n))
+
+    ctx = trivial_context()
+    a1 = donation_graph(ctx, party1, amount1)
+    a2 = donation_graph(ctx, party2, amount2)
+
+    cfg = CommuteConfig(eps_rp=1e-3, d=8, q=10, schedule="xla")
+    res = detect_anomalies(ctx, a1, a2, cfg, top_k=n_shift)
+
+    found = set(np.asarray(res.top_idx).tolist())
+    hits = len(found & set(shifters.tolist()))
+    print(f"{n} donors, {n_shift} shifted support between phases")
+    print(f"CADDeLaG top-{n_shift}: {sorted(found)}")
+    print(f"recovered shifters: {hits}/{n_shift}")
+    # the tuple-level baseline the paper calls out: amount deltas alone
+    amt_delta = np.abs(amount2 - amount1)
+    baseline = set(np.argsort(-amt_delta)[:n_shift].tolist())
+    print(f"amount-only baseline recovers: {len(baseline & set(shifters.tolist()))}/{n_shift}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Quickstart: CADDeLaG anomaly detection in ~20 lines.
+
+Builds the paper's synthetic GMM graph sequence (section 4.2.1), runs the
+full Algorithm-4 pipeline (commute-time embeddings via the distributed
+inverse-chain SDD solver, fused anomaly scoring), and prints the top
+anomalous nodes against the injected ground truth.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import CommuteConfig, detect_anomalies, trivial_context
+from repro.graphs import gmm_graph_sequence
+
+# 1. a 1x1 mesh context (swap in make_context(jax.make_mesh(...)) on a pod)
+ctx = trivial_context()
+
+# 2. the paper's synthetic benchmark: two graph snapshots, anomalies = the
+#    injected inter-cluster edges of the second snapshot
+seq = gmm_graph_sequence(ctx, n=256, seed=0, inject_p=0.02)
+
+# 3. accuracy knobs, named as in the paper: eps_RP (embedding dim),
+#    d (inverse-chain length), q (Richardson iterations)
+cfg = CommuteConfig(eps_rp=1e-3, d=8, q=10, schedule="xla")
+
+# 4. Algorithm 4 end-to-end
+res = detect_anomalies(ctx, seq.a1, seq.a2, cfg, top_k=15)
+
+truth = set(seq.anomalous_nodes.tolist())
+found = np.asarray(res.top_idx).tolist()
+hits = sum(1 for f in found if f in truth)
+print(f"top-15 anomalies: {found}")
+print(f"precision@15 vs injected ground truth: {hits}/15")

@@ -1,0 +1,82 @@
+"""Architecture registry: ``--arch <id>`` -> (full config, smoke config).
+
+All 10 assigned architectures plus the paper's own graph jobs.  Full configs
+are exercised only via the dry-run (ShapeDtypeStruct, no allocation); smoke
+tests instantiate the reduced SMOKE variants on CPU.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.shapes import (
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES_BY_NAME,
+    TRAIN_4K,
+    ShapeSpec,
+    input_specs,
+    is_supported,
+    supported_shapes,
+)
+from repro.models.common import ArchConfig
+
+_MODULES = {
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "granite-3-2b": "granite_3_2b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "deepseek-67b": "deepseek_67b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "zamba2-7b": "zamba2_7b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b",
+    "granite-moe-3b-a800m": "granite_moe_3b",
+    "rwkv6-3b": "rwkv6_3b",
+    "chameleon-34b": "chameleon_34b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {list(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_smoke(arch_id: str) -> ArchConfig:
+    return _module(arch_id).SMOKE
+
+
+def all_cells() -> list[tuple[str, ShapeSpec]]:
+    """Every supported (arch x shape) cell -- 34 runnable of the 40 assigned
+    (6 long_500k cells are documented skips for quadratic-attention archs)."""
+    cells = []
+    for aid in ARCH_IDS:
+        cfg = get_config(aid)
+        for sh in supported_shapes(cfg):
+            cells.append((aid, sh))
+    return cells
+
+
+__all__ = [
+    "ALL_SHAPES",
+    "ARCH_IDS",
+    "DECODE_32K",
+    "LONG_500K",
+    "PREFILL_32K",
+    "SHAPES_BY_NAME",
+    "TRAIN_4K",
+    "ShapeSpec",
+    "all_cells",
+    "get_config",
+    "get_smoke",
+    "input_specs",
+    "is_supported",
+    "supported_shapes",
+]

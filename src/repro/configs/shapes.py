@@ -1,0 +1,77 @@
+"""Input-shape cells shared by all assigned LM architectures.
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against a KV
+cache of ``seq_len``), NOT ``train_step``.  ``long_500k`` needs sub-quadratic
+attention: it runs only for SSM/hybrid archs (zamba2, rwkv6) and is a
+documented skip for pure full-attention archs (see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+TRAIN_4K = ShapeSpec("train_4k", "train", 4096, 256)
+PREFILL_32K = ShapeSpec("prefill_32k", "prefill", 32768, 32)
+DECODE_32K = ShapeSpec("decode_32k", "decode", 32768, 128)
+LONG_500K = ShapeSpec("long_500k", "decode", 524288, 1)
+
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
+
+# families whose attention cost is sub-quadratic in context (state-based)
+_SUBQUADRATIC = ("ssm", "hybrid")
+
+
+def supported_shapes(cfg: ArchConfig) -> tuple[ShapeSpec, ...]:
+    out = [TRAIN_4K, PREFILL_32K, DECODE_32K]
+    if cfg.family in _SUBQUADRATIC:
+        out.append(LONG_500K)
+    return tuple(out)
+
+
+def is_supported(cfg: ArchConfig, shape: ShapeSpec) -> bool:
+    return any(s.name == shape.name for s in supported_shapes(cfg))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Weak-type-correct, shardable, zero device allocation.  ``[audio]``/``[vlm]``
+    archs: the modality frontend is a stub -- for seamless the encoder input is
+    precomputed frame embeddings (B, S, d_model); for chameleon the VQ image
+    tokens share the token vocabulary, so inputs are plain token ids.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if cfg.input_mode == "frames":
+            specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.cdtype)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.input_mode == "frames":
+            specs["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.cdtype)
+        return specs
+    if shape.kind == "decode":
+        # one new token; the KV cache of length seq_len is built by the caller
+        # via jax.eval_shape(init_cache, ...) -- see launch/dryrun.py.
+        return {"token": jax.ShapeDtypeStruct((b,), i32)}
+    raise ValueError(shape.kind)

@@ -1,0 +1,49 @@
+"""CADDeLaG core: distributed commute-time anomaly detection in JAX.
+
+Public API re-exports.
+"""
+
+from repro.core.cad import CADResult, detect_anomalies, node_anomaly_scores, top_anomalies
+from repro.core.chain import ChainOperator, chain_product
+from repro.core.distmatrix import (
+    SCHEDULES,
+    DistContext,
+    build_from_nodes,
+    make_context,
+    matmul,
+    matmul_rowblock,
+    trivial_context,
+)
+from repro.core.embedding import (
+    CommuteConfig,
+    Embedding,
+    commute_distance_block,
+    commute_time_embedding,
+    edge_projection,
+    exact_commute_distances,
+)
+from repro.core.solver import estimate_solution, residual_norm
+
+__all__ = [
+    "CADResult",
+    "ChainOperator",
+    "CommuteConfig",
+    "DistContext",
+    "Embedding",
+    "SCHEDULES",
+    "build_from_nodes",
+    "chain_product",
+    "commute_distance_block",
+    "commute_time_embedding",
+    "detect_anomalies",
+    "edge_projection",
+    "estimate_solution",
+    "exact_commute_distances",
+    "make_context",
+    "matmul",
+    "matmul_rowblock",
+    "node_anomaly_scores",
+    "residual_norm",
+    "top_anomalies",
+    "trivial_context",
+]

@@ -1,0 +1,103 @@
+"""CAD anomaly scoring over a graph transition (paper Algorithm 4).
+
+    dE      = |A_1 - A_2| (.) |D_1 - D_2|     (Hadamard)
+    F_i     = sum_j dE[i, j]                  (node anomaly scores)
+
+The commute-distance matrices D_t are *never materialized*: each device fuses
+the distance evaluation ||Z_i - Z_j||^2 (two skinny GEMMs on the MXU), the
+|dA| gate, and the row reduction inside its own adjacency tile.  Pairs with
+dA = 0 contribute nothing -- the paper's "only compute d for changed pairs"
+optimization becomes a fused multiply on dense hardware, which beats
+gather/scatter on the MXU for dense graphs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.distmatrix import DistContext
+from repro.core.embedding import CommuteConfig, Embedding, commute_time_embedding
+
+
+def node_anomaly_scores(
+    ctx: DistContext,
+    a1: jax.Array,
+    a2: jax.Array,
+    e1: Embedding,
+    e2: Embedding,
+) -> jax.Array:
+    """F (n,) row-sharded; fused blockwise Alg. 4 lines 3-6."""
+    n = a1.shape[0]
+    R, C = ctx.n_row_shards, ctx.n_col_shards
+    pr, pc = n // R, n // C
+
+    def local(b1, b2, z1, z2, v1, v2):
+        r = lax.axis_index(ctx.row_axes)
+        c = lax.axis_index(ctx.col_axes)
+        rows = r * pr + jnp.arange(pr)
+        cols = c * pc + jnp.arange(pc)
+
+        def dist(z, vol):
+            zi = z[rows].astype(jnp.float32)
+            zj = z[cols].astype(jnp.float32)
+            sq_i = jnp.sum(zi * zi, -1)
+            sq_j = jnp.sum(zj * zj, -1)
+            return vol * (sq_i[:, None] + sq_j[None, :] - 2.0 * (zi @ zj.T))
+
+        de = jnp.abs(b1.astype(jnp.float32) - b2.astype(jnp.float32)) * jnp.abs(
+            dist(z1, v1) - dist(z2, v2)
+        )
+        return lax.psum(de.sum(axis=1), ctx.col_axes)
+
+    fn = jax.shard_map(
+        local,
+        mesh=ctx.mesh,
+        in_specs=(
+            ctx.matrix_spec,
+            ctx.matrix_spec,
+            P(None, None),
+            P(None, None),
+            P(),
+            P(),
+        ),
+        out_specs=ctx.vector_spec,
+    )
+    # Z is (n, k_RP) -- small; replicate it for tile-local access to rows+cols.
+    z1 = ctx.constrain(e1.z, P(None, None))
+    z2 = ctx.constrain(e2.z, P(None, None))
+    return fn(a1, a2, z1, z2, e1.vol, e2.vol)
+
+
+def top_anomalies(scores: jax.Array, k: int):
+    vals, idx = lax.top_k(scores, k)
+    return idx, vals
+
+
+@dataclass
+class CADResult:
+    scores: jax.Array  # (n,) node anomaly scores
+    top_idx: jax.Array  # (k,)
+    top_val: jax.Array  # (k,)
+
+
+def detect_anomalies(
+    ctx: DistContext,
+    a1: jax.Array,
+    a2: jax.Array,
+    cfg: CommuteConfig | None = None,
+    *,
+    top_k: int = 10,
+    use_kernel: bool = False,
+) -> CADResult:
+    """End-to-end CADDeLaG (Algorithm 4) for one graph transition."""
+    cfg = cfg or CommuteConfig()
+    e1 = commute_time_embedding(ctx, a1, cfg, use_kernel=use_kernel)
+    e2 = commute_time_embedding(ctx, a2, cfg, use_kernel=use_kernel)
+    scores = node_anomaly_scores(ctx, a1, a2, e1, e2)
+    idx, vals = top_anomalies(scores, top_k)
+    return CADResult(scores=scores, top_idx=idx, top_val=vals)

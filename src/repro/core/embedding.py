@@ -1,0 +1,141 @@
+"""Commute-time embedding (paper Algorithm 3, CommuteTimeEmbedding).
+
+For j = 1..k_RP:  y_j = B^T W^{1/2} q_j  (edge-space Rademacher projection,
+generated counter-based -- see :mod:`repro.core.rng`),  solve L z_j = y_j with
+the precomputed chain operator.  Stack Z = [z_1 .. z_k]; then
+
+    c(i, j) ~= V_G * || Z_i - Z_j ||^2.
+
+The edge projection never materializes the m = n^2 edge space: each device
+reduces sqrt(A) (.) Q over its own adjacency tile, regenerating Q from integer
+hashes.  One pass over A per batch of k_RP columns, zero stored randomness.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import rng as crng
+from repro.core.chain import ChainOperator, chain_product
+from repro.core.distmatrix import DistContext
+from repro.core.solver import estimate_solution
+
+
+@dataclass(frozen=True)
+class CommuteConfig:
+    """Accuracy knobs, named as in the paper (eps_RP, d, q)."""
+
+    eps_rp: float = 1e-3
+    d: int = 6  # inverse-chain length
+    q: int = 10  # Richardson iterations
+    seed: int = 0
+    schedule: str = "cannon"
+    dtype: object = jnp.float32
+    deflate: bool = True
+    fuse_l: bool = False
+    k_override: int | None = None  # force embedding dim (tests/ablations)
+
+    def k_rp(self, n: int) -> int:
+        if self.k_override is not None:
+            return int(self.k_override)
+        import math
+
+        return max(1, math.ceil(math.log(n / self.eps_rp)))
+
+
+def edge_projection(ctx: DistContext, a: jax.Array, seed: int, k: int) -> jax.Array:
+    """Y = B^T W^{1/2} Q for k Rademacher columns, (n, k) row-sharded.
+
+    Y[i, c] = sum_j sqrt(A[i, j]) * Q_c[i, j] with Q_c antisymmetric +/-1.
+    Entries scaled 1/sqrt(k) (Johnson-Lindenstrauss normalization).
+    """
+    n = a.shape[0]
+    R, C = ctx.n_row_shards, ctx.n_col_shards
+    pr, pc = n // R, n // C
+
+    def local(blk):
+        r = lax.axis_index(ctx.row_axes)
+        c = lax.axis_index(ctx.col_axes)
+        rows = r * pr + jnp.arange(pr)
+        cols = c * pc + jnp.arange(pc)
+        s = jnp.sqrt(jnp.maximum(blk.astype(jnp.float32), 0.0))
+
+        def col(cc, acc):
+            q = crng.edge_rademacher(seed, rows[:, None], cols[None, :], cc)
+            return acc.at[:, cc].set(jnp.sum(s * q, axis=1))
+
+        # pcast-to-varying: carry must match the body output's varying type.
+        acc0 = lax.pcast(
+            jnp.zeros((pr, k), jnp.float32), ctx.row_axes + ctx.col_axes, to="varying"
+        )
+        y = lax.fori_loop(0, k, col, acc0)
+        return lax.psum(y, ctx.col_axes)
+
+    fn = jax.shard_map(
+        local, mesh=ctx.mesh, in_specs=ctx.matrix_spec, out_specs=P(ctx.row_axes, None)
+    )
+    return fn(a) * (1.0 / jnp.sqrt(jnp.float32(k)))
+
+
+@dataclass
+class Embedding:
+    z: jax.Array  # (n, k) row-sharded
+    vol: jax.Array  # scalar V_G
+    op: ChainOperator | None = None  # kept for reuse across random batches
+
+
+def commute_time_embedding(
+    ctx: DistContext,
+    a: jax.Array,
+    cfg: CommuteConfig,
+    *,
+    op: ChainOperator | None = None,
+    use_kernel: bool = False,
+) -> Embedding:
+    n = a.shape[0]
+    k = cfg.k_rp(n)
+    if op is None:
+        op = chain_product(
+            ctx,
+            a,
+            cfg.d,
+            schedule=cfg.schedule,
+            dtype=cfg.dtype,
+            deflate=cfg.deflate,
+            fuse_l=cfg.fuse_l,
+            use_kernel=use_kernel,
+        )
+    y = edge_projection(ctx, a, cfg.seed, k)
+    z = estimate_solution(ctx, op, y, cfg.q, deflate=cfg.deflate)
+    return Embedding(z=z, vol=op.vol, op=op)
+
+
+def commute_distance_block(
+    emb: Embedding, rows: jax.Array, cols: jax.Array
+) -> jax.Array:
+    """c(i, j) = V_G ||Z_i - Z_j||^2 for an index block (gathered Z rows)."""
+    zi = emb.z[rows].astype(jnp.float32)
+    zj = emb.z[cols].astype(jnp.float32)
+    sq_i = jnp.sum(zi * zi, axis=-1)
+    sq_j = jnp.sum(zj * zj, axis=-1)
+    cross = zi @ zj.T
+    return emb.vol * (sq_i[:, None] + sq_j[None, :] - 2.0 * cross)
+
+
+def exact_commute_distances(a) -> jax.Array:
+    """O(n^3) eigendecomposition oracle (tests / paper Fig. 2 baseline)."""
+    import numpy as np
+
+    a = np.asarray(a, np.float64)
+    n = a.shape[0]
+    deg = a.sum(1)
+    l_mat = np.diag(deg) - a
+    pinv = np.linalg.pinv(l_mat, rcond=1e-12)
+    di = np.diag(pinv)
+    vol = deg.sum()
+    return jnp.asarray(vol * (di[:, None] + di[None, :] - 2.0 * pinv))

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, Prefetcher, global_batch_for, host_batch
+
+__all__ = ["DataConfig", "Prefetcher", "global_batch_for", "host_batch"]

@@ -1,0 +1,13 @@
+from repro.graphs.synthetic import (
+    climate_like_sequence,
+    gmm_graph_sequence,
+    gmm_points,
+    similarity_graph,
+)
+
+__all__ = [
+    "climate_like_sequence",
+    "gmm_graph_sequence",
+    "gmm_points",
+    "similarity_graph",
+]

@@ -1,0 +1,77 @@
+"""Fused edge-space random projection Pallas kernel.
+
+Computes Y[i, c] = sum_j sqrt(A[i, j]) * Q_c[i, j] -- i.e. Y = B^T W^{1/2} Q
+for ``k`` Rademacher columns -- WITHOUT materializing the m = n^2 edge space.
+The antisymmetric Rademacher field Q is regenerated inside the kernel from the
+same splitmix32 counter hash as :mod:`repro.core.rng` (bit-identical: the hash
+is plain jnp uint32 ops and runs on the VPU), so the kernel reads only the
+adjacency tile and writes only the (bm, k) output tile: arithmetic intensity
+k ops/byte of A, zero bytes of stored randomness.
+
+Grid: (rows/bm, cols/bn) with the column walk innermost and sequential; the
+output row-tile is accumulated across the column steps in-place (output
+revisiting), matching the TPU grid execution order.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import rng as crng
+
+
+def _edge_proj_kernel(a_ref, o_ref, *, seed: int, k: int, bm: int, bn: int, col_steps: int):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    rows = i * bm + jnp.arange(bm, dtype=jnp.uint32)
+    cols = j * bn + jnp.arange(bn, dtype=jnp.uint32)
+    s = jnp.sqrt(jnp.maximum(a_ref[...].astype(jnp.float32), 0.0))
+    # (bm, bn, k) Rademacher tile, regenerated -- identical hash to core.rng.
+    q = crng.edge_rademacher(
+        seed,
+        rows[:, None, None],
+        cols[None, :, None],
+        jnp.arange(k, dtype=jnp.uint32)[None, None, :],
+    )
+    o_ref[...] += jnp.einsum("ij,ijc->ic", s, q, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("seed", "k", "bm", "bn", "interpret")
+)
+def edge_projection(
+    a: jax.Array,
+    *,
+    seed: int,
+    k: int,
+    bm: int = 256,
+    bn: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Y (n, k) = B^T W^{1/2} Q with JL 1/sqrt(k) normalization."""
+    m, n = a.shape
+    from repro.kernels.tiling import fit
+
+    bm, bn = fit(m, bm), fit(n, bn)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grid = (m // bm, n // bn)
+    y = pl.pallas_call(
+        functools.partial(
+            _edge_proj_kernel, seed=seed, k=k, bm=bm, bn=bn, col_steps=grid[1]
+        ),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=interpret,
+    )(a)
+    return y * (1.0 / jnp.sqrt(jnp.float32(k)))

@@ -1,0 +1,18 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+``interpret=None`` auto-selects: compiled Pallas on TPU, interpret-mode
+(Python execution of the kernel body) on CPU -- so the same call sites run
+everywhere and tests exercise the kernel bodies on this CPU container.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.block_matmul import block_matmul
+from repro.kernels.cad_score import cad_scores
+from repro.kernels.edge_projection import edge_projection
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.wkv import wkv
+
+__all__ = ["block_matmul", "cad_scores", "edge_projection", "flash_attention", "wkv"]

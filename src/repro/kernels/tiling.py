@@ -1,0 +1,20 @@
+"""Tile-shape fitting shared by the kernels.
+
+``fit(dim, want)`` returns the largest divisor of ``dim`` that is <= ``want``,
+preferring MXU-aligned (multiple of 128) tiles, then 8-aligned, then anything.
+Keeps kernel call sites robust to odd shard shapes without padding.
+"""
+
+from __future__ import annotations
+
+
+def fit(dim: int, want: int) -> int:
+    want = min(want, dim)
+    best = 1
+    for align in (128, 8, 1):
+        t = (want // align) * align
+        while t >= align:
+            if dim % t == 0:
+                return t
+            t -= align
+    return best

@@ -1,0 +1,318 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST be the first two lines: jax locks the device count on first init.
+# The 512 placeholder host devices exist ONLY for this dry-run process so
+# jax.make_mesh can build the production meshes; smoke tests and benches
+# (separate processes) see the real single CPU device.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the right step function (train_step / prefill /
+serve_step) against ShapeDtypeStruct inputs (zero allocation), compiles it
+for the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh, and records:
+
+  - compiled.memory_analysis()   (bytes per device -- proves it fits)
+  - compiled.cost_analysis()     (HLO FLOPs / bytes -> roofline terms)
+  - collective bytes by op type  (parsed from the post-SPMD HLO text)
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json; the
+roofline report (benchmarks/roofline.py) and EXPERIMENTS.md read from them.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.models import common as cm
+from repro.models import lm
+from repro.serving.engine import make_serve_step
+from repro.training.optim import OptConfig
+from repro.training.train_step import make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# lowering per cell
+# ---------------------------------------------------------------------------
+
+
+def _named(mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def _sds_with(shapes, shardings):
+    return jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s), shapes, shardings
+    )
+
+
+def long_context_rules(mesh: Mesh) -> dict:
+    """long_500k (batch=1): batch unshardable; spread the KV sequence over
+    every mesh axis instead and keep heads/inner replicated."""
+    r = dict(cm.DEFAULT_RULES)
+    r["batch"] = None
+    r["kv_seq"] = tuple(mesh.axis_names)  # ("pod","data","model") or ("data","model")
+    r["heads"] = "model"
+    r["inner"] = "model"
+    return r
+
+
+def fsdp_rules(mesh: Mesh) -> dict:
+    """Beyond-baseline preset: pure FSDP/ZeRO-3 -- batch over BOTH mesh axes,
+    no tensor parallelism.  Kills the per-layer TP activation all-reduces
+    (the dominant collective term of the baseline) in exchange for per-layer
+    parameter all-gathers that XLA overlaps with the layer scan.  Multi-pod:
+    params replicate across pods (one cross-pod grad all-reduce per step)."""
+    r = dict(cm.DEFAULT_RULES)
+    r["batch"] = ("data", "model")
+    r["batch_inner"] = ("data", "model")
+    r["heads"] = None
+    r["ff"] = None
+    r["inner"] = None
+    r["vocab"] = None  # logits stay unsharded per loss chunk (small)
+    # ZeRO-3: every weight's d_model dim shards over the WHOLE mesh --
+    # params/grads/opt states are 256-way; grad sync lowers to
+    # reduce-scatter instead of a 16-way all-reduce.
+    r["embed_p"] = ("data", "model")
+    r["embed_d"] = ("data", "model")
+    r["kv_seq"] = "model"
+    return r
+
+
+def seqshard_rules(mesh: Mesh) -> dict:
+    """Beyond-baseline preset for prefill: shard the SEQUENCE over "model"
+    instead of tensor-parallelism.  The chunked-flash scan streams KV chunks
+    (each step all-gathers one chunk -- ring-attention-style), so the
+    per-layer TP activation all-reduces disappear; params stay ZeRO-sharded
+    over the whole mesh (they carry no seq axis)."""
+    r = dict(cm.DEFAULT_RULES)
+    r["batch"] = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    r["batch_inner"] = r["batch"]
+    r["seq"] = "model"
+    r["heads"] = None
+    r["ff"] = None
+    r["inner"] = None
+    r["vocab"] = None
+    r["embed_p"] = ("data", "model")
+    r["embed_d"] = ("data", "model")
+    r["kv_seq"] = "model"
+    return r
+
+
+RULE_PRESETS = {"baseline": None, "fsdp": fsdp_rules, "seqshard": seqshard_rules}
+
+
+def rules_for(mesh: Mesh, shape: configs.ShapeSpec, preset: str = "baseline") -> dict:
+    if shape.name.startswith("long"):
+        return long_context_rules(mesh)
+    if preset != "baseline" and shape.kind in ("train", "prefill"):
+        return RULE_PRESETS[preset](mesh)
+    return cm.multipod_rules() if "pod" in mesh.axis_names else dict(cm.DEFAULT_RULES)
+
+
+def lower_cell(arch_id: str, shape: configs.ShapeSpec, mesh: Mesh, *, accum: int = 1,
+               preset: str = "baseline", vocab_chunk: int | None = None):
+    """Lower + compile one cell; returns the record dict."""
+    cfg = configs.get_config(arch_id)
+    if vocab_chunk:
+        cfg = cfg.replace(vocab_chunk=vocab_chunk)
+    spec = lm.build_spec(cfg)
+    rules = rules_for(mesh, shape, preset)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        opt_cfg = OptConfig(name=cfg.optimizer)
+        step_fn, pspecs, ospecs, batch_spec = make_train_step(
+            spec, mesh, opt_cfg, rules=rules, accum=accum
+        )
+        pshape = jax.eval_shape(partial(lm.init_params, spec), jax.random.PRNGKey(0))
+        from repro.training.optim import make_optimizer
+
+        opt_init, _ = make_optimizer(opt_cfg)
+        oshape = jax.eval_shape(opt_init, pshape)
+        batch_shapes = configs.input_specs(cfg, shape)
+        bspecs = {
+            k: cm.sanitize_spec(
+                cm.logical_to_spec(("batch", "seq", "embed")[: v.ndim], rules), v.shape, mesh
+            )
+            for k, v in batch_shapes.items()
+        }
+        args = (
+            _sds_with(pshape, _named(mesh, pspecs)),
+            _sds_with(oshape, _named(mesh, ospecs)),
+            _sds_with(batch_shapes, _named(mesh, bspecs)),
+        )
+        lowered = step_fn.lower(*args)
+
+    elif shape.kind == "prefill":
+        from repro.serving.engine import make_prefill
+
+        pf, pspecs = make_prefill(spec, mesh, s_max=shape.seq_len, rules=rules)
+        pshape = jax.eval_shape(partial(lm.init_params, spec), jax.random.PRNGKey(0))
+        batch_shapes = configs.input_specs(cfg, shape)
+        bspecs = {
+            k: cm.sanitize_spec(
+                cm.logical_to_spec(("batch", "seq", "embed")[: v.ndim], rules), v.shape, mesh
+            )
+            for k, v in batch_shapes.items()
+        }
+        lowered = pf.lower(
+            _sds_with(pshape, _named(mesh, pspecs)),
+            _sds_with(batch_shapes, _named(mesh, bspecs)),
+        )
+
+    elif shape.kind == "decode":
+        enc_len = shape.seq_len if spec.is_encdec else 0
+        step_fn, cache_shapes, cache_shardings, pspecs = make_serve_step(
+            spec, mesh, batch=shape.global_batch, s_max=shape.seq_len,
+            enc_len=enc_len, rules=rules, donate_cache=True,
+        )
+        pshape = jax.eval_shape(partial(lm.init_params, spec), jax.random.PRNGKey(0))
+        tok_spec = cm.sanitize_spec(
+            cm.logical_to_spec(("batch",), rules), (shape.global_batch,), mesh
+        )
+        tok = jax.ShapeDtypeStruct(
+            (shape.global_batch,), jnp.int32, sharding=NamedSharding(mesh, tok_spec)
+        )
+        lowered = step_fn.lower(
+            _sds_with(pshape, _named(mesh, pspecs)), tok, _sds_with(cache_shapes, cache_shardings)
+        )
+    else:
+        raise ValueError(shape.kind)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not support it
+        mem_d = {"error": str(e)}
+
+    try:
+        cost_list = compiled.cost_analysis()
+        cost = cost_list if isinstance(cost_list, dict) else (cost_list[0] if cost_list else {})
+        cost_d = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0)),
+        }
+    except Exception as e:
+        cost_d = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    t0 = time.time()
+    ana = hlo_analysis.analyze(hlo)  # trip-count-corrected flops + collectives
+    t_ana = time.time() - t0
+
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(pshape))
+    record = {
+        "arch": arch_id,
+        "shape": shape.name,
+        "kind": shape.kind,
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "mesh": {k: int(v) for k, v in mesh.shape.items()},
+        "chips": mesh_chip_count(mesh),
+        "preset": preset,
+        "accum": accum,
+        "n_params": n_params,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "analyze_s": round(t_ana, 2),
+        "memory_analysis": mem_d,
+        "cost_analysis_raw": cost_d,  # XLA counts while bodies ONCE (see hlo_analysis)
+        "hlo_analysis": ana,  # trip-count-corrected, per-device
+        "hlo_bytes": len(hlo),
+    }
+    return record
+
+
+def run_cells(cells, meshes, out_dir: str, accum: int = 1, preset: str = "baseline") -> list[dict]:
+    os.makedirs(out_dir, exist_ok=True)
+    records = []
+    for mesh_name in meshes:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+        for arch_id, shape in cells:
+            tag = f"{arch_id}__{shape.name}__{mesh_name}"
+            path = os.path.join(out_dir, tag + ".json")
+            print(f"=== {tag} ===", flush=True)
+            try:
+                rec = lower_cell(arch_id, shape, mesh, accum=accum, preset=preset)
+                rec["status"] = "ok"
+                print(
+                    f"  ok: compile={rec['compile_s']}s "
+                    f"dot_flops={rec['hlo_analysis']['dot_flops']:.3e} "
+                    f"coll={rec['hlo_analysis']['collective_total_bytes']:.3e}B",
+                    flush=True,
+                )
+            except Exception as e:
+                rec = {
+                    "arch": arch_id, "shape": shape.name, "mesh": mesh_name,
+                    "status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:],
+                }
+                print(f"  ERROR: {type(e).__name__}: {str(e)[:200]}", flush=True)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            records.append(rec)
+    return records
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all supported)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--rules", default="baseline", choices=list(RULE_PRESETS),
+                    help="sharding preset for train/prefill cells (see EXPERIMENTS.md Perf)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    out_dir = args.out or os.path.normpath(OUT_DIR)
+    if args.all or args.arch is None:
+        cells = configs.all_cells()
+    else:
+        cfg = configs.get_config(args.arch)
+        shapes = (
+            [configs.SHAPES_BY_NAME[args.shape]]
+            if args.shape
+            else list(configs.supported_shapes(cfg))
+        )
+        cells = [(args.arch, s) for s in shapes]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    records = run_cells(cells, meshes, out_dir, accum=args.accum, preset=args.rules)
+    n_ok = sum(r["status"] == "ok" for r in records)
+    print(f"\n{n_ok}/{len(records)} cells compiled OK")
+    if n_ok < len(records):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

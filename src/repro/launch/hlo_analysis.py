@@ -1,0 +1,245 @@
+"""Trip-count-aware HLO cost extraction.
+
+``compiled.cost_analysis()`` visits every computation ONCE -- a 95-layer
+scan body or a 32-chunk flash-attention loop is counted a single time, which
+understates FLOPs and collective bytes by the trip count.  This module parses
+the post-SPMD HLO text into its computation blocks, builds the call graph
+(fusions/calls weight 1, while bodies weight = known trip count), propagates
+execution multipliers from ENTRY, and sums per-computation
+
+  - dot/convolution FLOPs  (2 * prod(result dims) * prod(contracting dims))
+  - collective bytes by op type (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), result-shape bytes x ring multiplier
+
+into trip-corrected totals.  Validated against analytic einsum counts in
+tests/test_hlo_analysis.py (unrolled-vs-scanned programs must agree).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "c64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+# bytes moved per participating device (large-ring limit)
+RING_MULTIPLIER = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+_CALL_REFS = (
+    (re.compile(r"body=%?([\w.\-]+)"), "body"),
+    (re.compile(r"condition=%?([\w.\-]+)"), "cond"),
+    (re.compile(r"calls=%?([\w.\-]+)"), "call"),
+    (re.compile(r"to_apply=%?([\w.\-]+)"), "call"),
+    (re.compile(r"branch_computations=\{([^}]*)\}"), "branches"),
+)
+_TRIP = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_TRIP2 = re.compile(r'"trip_count"\s*:\s*\{\s*"n"\s*:\s*"?(\d+)"?')
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _parse_op_line(ln: str):
+    """'  %name = SIG op-type(args), attrs' -> (name, sig, op_type, rest).
+
+    SIG may be a parenthesized tuple containing nested brackets/spaces; we
+    balance parens instead of regexing.  Returns None if not an op def.
+    """
+    s = ln.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%") and not s[:1].isalpha():
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[:eq].lstrip("%").strip()
+    rhs = s[eq + 3:]
+    if rhs.startswith("("):
+        depth, i = 0, 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        sig = rhs[: i + 1]
+        rest = rhs[i + 1:].lstrip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        sig = rhs[:sp]
+        rest = rhs[sp + 1:]
+    m = re.match(r"([\w\-]+)\(", rest)
+    if not m:
+        return None
+    return name, sig, m.group(1), rest
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(sig: str) -> int:
+    m = _SHAPE.search(sig)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_dims(sig: str) -> list[int]:
+    m = _SHAPE.search(sig)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    dot_flops: float = 0.0
+    coll_bytes: dict = field(default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_counts: dict = field(default_factory=lambda: {k: 0 for k in COLLECTIVES})
+    # edges: (callee, kind, trip)
+    edges: list = field(default_factory=list)
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    shapes: dict[str, str] = {}  # op name -> type signature
+    cur: Computation | None = None
+
+    lines = text.splitlines()
+    # pass 1: op shapes (needed for dot operand lookup)
+    for ln in lines:
+        p = _parse_op_line(ln)
+        if p:
+            shapes[p[0]] = p[1]
+
+    for ln in lines:
+        h = _COMP_HEADER.match(ln.strip()) if ln.rstrip().endswith("{") else None
+        if h:
+            cur = Computation(name=h.group(2), is_entry=bool(h.group(1)))
+            comps[cur.name] = cur
+            continue
+        if ln.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        p = _parse_op_line(ln)
+        if not p:
+            continue
+        op_name, sig, op_type, _rest = p
+
+        # call edges
+        for rx, kind in _CALL_REFS:
+            for ref in rx.finditer(ln):
+                if kind == "branches":
+                    for b in _OPERANDS.findall(ref.group(1)):
+                        cur.edges.append((b, "call", 1))
+                elif kind == "body":
+                    trip = 1
+                    tm = _TRIP.search(ln) or _TRIP2.search(ln)
+                    if tm:
+                        trip = int(tm.group(1))
+                    cur.edges.append((ref.group(1), "body", trip))
+                elif kind == "cond":
+                    trip = 1
+                    tm = _TRIP.search(ln) or _TRIP2.search(ln)
+                    if tm:
+                        trip = int(tm.group(1)) + 1
+                    cur.edges.append((ref.group(1), "cond", trip))
+                else:
+                    cur.edges.append((ref.group(1), "call", 1))
+
+        base = op_type.replace("-start", "")
+        if base in COLLECTIVES and not op_type.endswith("-done"):
+            b = _shape_bytes(sig)
+            cur.coll_bytes[base] += b * RING_MULTIPLIER[base]
+            cur.coll_counts[base] += 1
+        elif op_type in ("dot", "convolution"):
+            result_elems = _shape_elems(sig)
+            # contracting sizes from lhs operand shape
+            operands = _OPERANDS.findall(_rest)
+            flops = 0.0
+            cm_ = _CONTRACT.search(ln)
+            if operands and cm_ is not None and operands[0] in shapes:
+                lhs_dims = _shape_dims(shapes[operands[0]])
+                contract = 1
+                for ci in cm_.group(1).split(","):
+                    if ci and int(ci) < len(lhs_dims):
+                        contract *= lhs_dims[int(ci)]
+                flops = 2.0 * result_elems * contract
+            else:
+                # convolution or unparsable dot: fall back to 2*result elems
+                flops = 2.0 * result_elems
+            cur.dot_flops += flops
+    return comps
+
+
+def multipliers(comps: dict[str, Computation]) -> dict[str, float]:
+    """Execution count per computation, propagated from ENTRY."""
+    mult = {name: 0.0 for name in comps}
+    entries = [c for c in comps.values() if c.is_entry] or list(comps.values())[:1]
+
+    def visit(name: str, m: float, depth=0):
+        if name not in comps or depth > 64:
+            return
+        mult[name] += m
+        for callee, kind, trip in comps[name].edges:
+            visit(callee, m * trip, depth + 1)
+
+    for e in entries:
+        visit(e.name, 1.0)
+    return mult
+
+
+def analyze(text: str) -> dict:
+    comps = parse_hlo(text)
+    mult = multipliers(comps)
+    dot_flops = 0.0
+    coll = {k: 0.0 for k in COLLECTIVES}
+    counts = {k: 0.0 for k in COLLECTIVES}
+    for name, c in comps.items():
+        m = mult.get(name, 0.0)
+        dot_flops += c.dot_flops * m
+        for k in COLLECTIVES:
+            coll[k] += c.coll_bytes[k] * m
+            counts[k] += c.coll_counts[k] * m
+    return {
+        "dot_flops": dot_flops,
+        "collective_bytes": {k: int(v) for k, v in coll.items()},
+        "collective_total_bytes": int(sum(coll.values())),
+        "collective_counts": {k: int(v) for k, v in counts.items()},
+        "n_computations": len(comps),
+    }

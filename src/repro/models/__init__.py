@@ -1,0 +1,33 @@
+"""Pure-JAX composable LM substrate (GQA / MoE / Mamba2 / RWKV6 / enc-dec)."""
+
+from repro.models.common import ArchConfig, DEFAULT_RULES, multipod_rules
+from repro.models.lm import (
+    LMSpec,
+    build_spec,
+    cache_axes,
+    decode_step,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_axes,
+    param_count,
+    param_specs,
+    prefill,
+)
+
+__all__ = [
+    "ArchConfig",
+    "DEFAULT_RULES",
+    "LMSpec",
+    "build_spec",
+    "cache_axes",
+    "decode_step",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "multipod_rules",
+    "param_axes",
+    "param_count",
+    "param_specs",
+    "prefill",
+]

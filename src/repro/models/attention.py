@@ -1,0 +1,248 @@
+"""GQA attention: chunked-flash training/prefill, flash-decode serving.
+
+Pure-JAX chunked flash (lax.scan over KV blocks, online softmax) is the
+portable path that lowers on any backend -- it is what the dry-run compiles.
+``repro.kernels.flash_attention`` is the Pallas fast path for real TPUs; the
+two are allclose-tested against each other.
+
+Decode shards the KV cache *sequence* over the "model" mesh axis
+(flash-decode): per-shard partial softmax statistics are combined by the
+all-reduces XLA inserts for the sharded-S softmax/contraction -- no
+materialized (B, H, S) ever lives on one chip.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import common as cm
+from repro.models.common import ArchConfig
+
+_NEG_INF = -1e30
+
+
+def init_attention(cfg: ArchConfig, key, *, d_in: int | None = None):
+    """QKVO projections (+optional bias, qk-norm scales)."""
+    d = d_in or cfg.d_model
+    hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": cm.dense_init(ks[0], (d, nh * hd), cfg.pdtype),
+        "wk": cm.dense_init(ks[1], (d, nkv * hd), cfg.pdtype),
+        "wv": cm.dense_init(ks[2], (d, nkv * hd), cfg.pdtype),
+        "wo": cm.dense_init(ks[3], (nh * hd, cfg.d_model), cfg.pdtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh * hd,), cfg.pdtype)
+        p["bk"] = jnp.zeros((nkv * hd,), cfg.pdtype)
+        p["bv"] = jnp.zeros((nkv * hd,), cfg.pdtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), cfg.pdtype)
+        p["k_norm"] = jnp.ones((hd,), cfg.pdtype)
+    return p
+
+
+def attention_axes(cfg: ArchConfig):
+    ax = {
+        "wq": ("embed_p", "heads"),
+        "wk": ("embed_p", "kv_heads"),
+        "wv": ("embed_p", "kv_heads"),
+        "wo": ("heads", "embed_p"),
+    }
+    if cfg.qkv_bias:
+        ax.update(bq=("heads",), bk=("kv_heads",), bv=("kv_heads",))
+    if cfg.qk_norm:
+        ax.update(q_norm=("head_dim",), k_norm=("head_dim",))
+    return ax
+
+
+def _rms(x, scale):
+    xf = x.astype(jnp.float32)
+    y = xf * lax.rsqrt((xf * xf).mean(-1, keepdims=True) + 1e-6)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _project_qkv(cfg: ArchConfig, p, x, positions):
+    """x (B, S, d_in) -> q (B,S,nh,hd), k/v (B,S,nkv,hd) with RoPE applied."""
+    b, s, _ = x.shape
+    hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    dt = cfg.cdtype
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(b, s, nh, hd)
+    k = k.reshape(b, s, nkv, hd)
+    v = v.reshape(b, s, nkv, hd)
+    if cfg.qk_norm:
+        q = _rms(q, p["q_norm"])
+        k = _rms(k, p["k_norm"])
+    cos, sin = cm.rope_tables(positions, hd, cfg.rope_theta)
+    q = cm.apply_rope(q, cos, sin)
+    k = cm.apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _chunked_flash(cfg: ArchConfig, q, k, v, *, causal: bool, rules) -> jax.Array:
+    """(B,S,nh,hd) x (B,T,nkv,hd) -> (B,S,nh,hd): scan over KV chunks.
+
+    Online softmax; GQA handled by reshaping q to (B,S,nkv,groups,hd) so the
+    kv head axis contracts without materializing repeated K/V.
+    """
+    b, s, nh, hd = q.shape
+    t, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    ck = min(cfg.attn_chunk, t)
+    while t % ck:
+        ck //= 2
+    n_chunks = t // ck
+    scale = 1.0 / math.sqrt(hd)
+
+    qf = q.astype(jnp.float32).reshape(b, s, nkv, g, hd) * scale
+    kc = k.astype(jnp.float32).reshape(b, n_chunks, ck, nkv, hd)
+    vc = v.astype(jnp.float32).reshape(b, n_chunks, ck, nkv, hd)
+    q_pos = jnp.arange(s)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        idx, kb, vb = inp  # kb/vb: (B, ck, nkv, hd)
+        sc = jnp.einsum("bsngh,bcnh->bsngc", qf, kb)  # (B,S,nkv,g,ck)
+        if causal:
+            k_pos = idx * ck + jnp.arange(ck)
+            mask = q_pos[:, None] >= k_pos[None, :]  # (S, ck)
+            sc = jnp.where(mask[None, :, None, None, :], sc, _NEG_INF)
+        m_cur = jnp.max(sc, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        pexp = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + pexp.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bsngc,bcnh->bsngh", pexp, vb)
+        return (m_new, l_new, acc), None
+
+    # constrain the carry init: without this GSPMD may pick a replicated-batch
+    # layout for the while-loop carries (16x the per-device work).
+    init = (
+        cm.constrain(jnp.full((b, s, nkv, g), _NEG_INF, jnp.float32), ("batch", "seq", None, None), rules),
+        cm.constrain(jnp.zeros((b, s, nkv, g), jnp.float32), ("batch", "seq", None, None), rules),
+        cm.constrain(jnp.zeros((b, s, nkv, g, hd), jnp.float32), ("batch", "seq", None, None, None), rules),
+    )
+    xs = (jnp.arange(n_chunks), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0))
+    # remat each KV-chunk step: the backward recomputes the (bq, bk) score
+    # tile instead of saving it per chunk -- flash-attention-backward memory.
+    step_fn = jax.checkpoint(step) if cfg.remat else step
+    (m, l, acc), _ = lax.scan(step_fn, init, xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, s, nh, hd).astype(cfg.cdtype)
+
+
+def attend_train(cfg: ArchConfig, p, x, *, causal: bool = True, rules=cm.DEFAULT_RULES,
+                 kv_override: tuple[jax.Array, jax.Array] | None = None):
+    """Full-sequence attention (training / encoder / cross-attention).
+
+    ``kv_override=(k, v)`` turns this into cross-attention (q from x).
+    """
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    if kv_override is not None:
+        k, v = kv_override
+    q = cm.constrain(q, ("batch", "seq", "heads", "head_dim"), rules)
+    out = _chunked_flash(cfg, q, k, v, causal=causal, rules=rules)
+    out = out.reshape(b, s, -1)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(cfg.cdtype))
+
+
+def attend_prefill(cfg: ArchConfig, p, x, *, rules=cm.DEFAULT_RULES):
+    """Causal attention that also returns the (k, v) cache for decode."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    out = _chunked_flash(cfg, q, k, v, causal=True, rules=rules)
+    out = out.reshape(b, s, -1)
+    y = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(cfg.cdtype))
+    # cache layout (B, S, nkv, hd), sequence sharded over "model" (flash-decode)
+    k = cm.constrain(k, ("batch", "kv_seq", "kv_heads", "head_dim"), rules)
+    v = cm.constrain(v, ("batch", "kv_seq", "kv_heads", "head_dim"), rules)
+    return y, (k, v)
+
+
+def attend_decode(cfg: ArchConfig, p, x, cache, pos, *, rules=cm.DEFAULT_RULES):
+    """One-token decode against a (k, v) cache; returns (y, new_cache).
+
+    cache k/v: (B, S_max, nkv, hd) with the current token written at ``pos``.
+    Softmax over the sequence-sharded cache = flash-decode (XLA inserts the
+    cross-shard max/sum all-reduces).
+    """
+    b, one, _ = x.shape
+    k_cache, v_cache = cache
+    s_max = k_cache.shape[1]
+    positions = jnp.full((one,), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions)
+
+    k_cache = lax.dynamic_update_slice(k_cache, k_new.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = lax.dynamic_update_slice(v_cache, v_new.astype(v_cache.dtype), (0, pos, 0, 0))
+    k_cache = cm.constrain(k_cache, ("batch", "kv_seq", "kv_heads", "head_dim"), rules)
+    v_cache = cm.constrain(v_cache, ("batch", "kv_seq", "kv_heads", "head_dim"), rules)
+
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = nh // nkv
+    qf = q.astype(jnp.float32).reshape(b, one, nkv, g, hd) * (1.0 / math.sqrt(hd))
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    sc = jnp.einsum("bsngh,btnh->bsngt", qf, kf)  # (B,1,nkv,g,S_max)
+    valid = jnp.arange(s_max) <= pos
+    sc = jnp.where(valid[None, None, None, None, :], sc, _NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bsngt,btnh->bsngh", w, vf)
+    out = out.reshape(b, one, nh * hd).astype(cfg.cdtype)
+    y = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(cfg.cdtype))
+    return y, (k_cache, v_cache)
+
+
+def cross_attend_decode(cfg: ArchConfig, p, x, enc_kv, pos, *, rules=cm.DEFAULT_RULES):
+    """Decode-time cross-attention: static encoder K/V, no cache update.
+
+    Q gets RoPE at the decoder position (matching attend_train's projection
+    path at prefill); encoder K stays unrotated on both paths.
+    """
+    b, one, _ = x.shape
+    k, v = enc_kv
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = nh // nkv
+    dt = cfg.cdtype
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+    q = q.reshape(b, one, nh, hd)
+    if cfg.qk_norm:
+        q = _rms(q, p["q_norm"])
+    positions = jnp.full((one,), pos, jnp.int32)
+    cos, sin = cm.rope_tables(positions, hd, cfg.rope_theta)
+    q = cm.apply_rope(q, cos, sin)
+    qf = q.astype(jnp.float32).reshape(b, one, nkv, g, hd) * (1.0 / math.sqrt(hd))
+    sc = jnp.einsum("bsngh,btnh->bsngt", qf, k.astype(jnp.float32))
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bsngt,btnh->bsngh", w, v.astype(jnp.float32))
+    out = out.reshape(b, one, nh * hd).astype(dt)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(dt))
+
+
+def project_kv(cfg: ArchConfig, p, x_enc):
+    """Encoder output -> cross-attention K/V (no RoPE on cross keys)."""
+    b, t, _ = x_enc.shape
+    nkv, hd = cfg.n_kv_heads, cfg.hd
+    dt = cfg.cdtype
+    k = jnp.einsum("bsd,dh->bsh", x_enc, p["wk"].astype(dt)).reshape(b, t, nkv, hd)
+    v = jnp.einsum("bsd,dh->bsh", x_enc, p["wv"].astype(dt)).reshape(b, t, nkv, hd)
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(dt).reshape(nkv, hd)
+        v = v + p["bv"].astype(dt).reshape(nkv, hd)
+    return k, v

@@ -1,0 +1,314 @@
+"""Shared model substrate: config, sharding rules, norms, initializers.
+
+Every parameter carries a tuple of *logical* axis names; ``logical_to_spec``
+maps them to mesh axes via the rules table.  The same model code therefore
+runs on a 1-device CPU mesh, the 16x16 single-pod mesh, and the 2x16x16
+multi-pod mesh -- only the rules change.
+
+Sharding strategy (baseline):
+  batch         -> ("pod", "data")   # DP across pods, FSDP axis inside
+  vocab/heads/ff/experts -> "model"  # tensor parallel
+  embed (d_model) on *params*  -> "data"  (FSDP: gather per layer under scan)
+  kv sequence on *decode caches* -> "model" (flash-decode style)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """One config object for every assigned architecture family."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    norm: str = "rms"  # rms | ln
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    d_expert: int = 0
+    moe_layer_step: int = 1  # every k-th layer is MoE (llama4: 2)
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    # --- SSM (Mamba2) ---
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    attn_every: int = 0  # zamba2: shared attention block every k SSM layers
+    # --- RWKV6 ---
+    rwkv: bool = False
+    rwkv_head_dim: int = 64
+    # --- encoder-decoder ---
+    enc_layers: int = 0
+    dec_layers: int = 0
+    # --- modality frontend ---
+    input_mode: str = "tokens"  # tokens | frames (precomputed embeddings stub)
+    # --- sharding ---
+    # per-arch logical-rule overrides, e.g. granite-moe's 40 experts do not
+    # divide a 16-way "model" axis, so it shards the MoE capacity dim instead
+    rules_override: tuple = ()
+    # --- numerics / execution ---
+    optimizer: str = "adamw"  # adamw | adafactor (large-MoE memory diet)
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    vocab_chunk: int = 4096  # sequence chunk for the vocab-chunked loss
+    attn_chunk: int = 1024  # KV chunk for pure-JAX flash attention
+    max_seq: int = 131072  # RoPE table upper bound (decode positions)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding rows padded to a multiple of 256 so the vocab axis
+        shards evenly on any mesh up to 256-way; logits beyond ``vocab``
+        are masked to -inf in the unembed (standard MaxText-style padding)."""
+        return ((self.vocab + 255) // 256) * 256
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# logical sharding rules
+# ---------------------------------------------------------------------------
+
+# logical axis -> mesh axis (or None).  "batch" may map to a tuple of axes.
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("data",),
+    "batch_inner": ("data",),  # batch axes usable alongside vocab sharding
+    "seq": None,
+    "kv_seq": "model",  # decode caches: flash-decode over model axis
+    "embed": None,  # activations d_model replicated
+    "embed_p": "data",  # params d_model axis: FSDP shard
+    "embed_d": "data",  # embedding/unembedding tables' d_model axis
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": None,
+    "head_dim": None,
+    "ff": "model",
+    "experts": "model",
+    "expert_embed": "data",  # expert weights' d_model dim (2-axis storage)
+    "expert_ff": None,
+    "moe_cap": "data",  # MoE dispatch-buffer capacity dim
+    "inner": "model",  # mamba/rwkv inner channels
+    "state": None,
+    "layers": None,
+}
+
+
+def multipod_rules() -> dict[str, Any]:
+    r = dict(DEFAULT_RULES)
+    r["batch"] = ("pod", "data")
+    r["batch_inner"] = ("pod", "data")
+    return r
+
+
+def arch_rules(cfg: "ArchConfig", rules: dict[str, Any]) -> dict[str, Any]:
+    """Apply the config's per-arch logical-rule overrides."""
+    if not cfg.rules_override:
+        return rules
+    return {**rules, **dict(cfg.rules_override)}
+
+
+def logical_to_spec(axes: Sequence[str | None], rules: dict[str, Any]) -> P:
+    parts = []
+    for ax in axes:
+        m = rules.get(ax) if ax is not None else None
+        parts.append(m)
+    return P(*parts)
+
+
+def tree_specs(logical_tree, rules: dict[str, Any]):
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: logical_to_spec(axes, rules),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def constrain(x: jax.Array, axes: Sequence[str | None], rules: dict[str, Any]) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op outside jit mesh ctx).
+
+    If the rules carry ``_axis_sizes`` (attached by the launcher), any spec
+    entry whose mesh-axis product does not divide the dimension is dropped --
+    e.g. qwen2's 12 q-heads are left unsharded on a 16-wide "model" axis
+    instead of tripping GSPMD padding on an activation.
+    """
+    spec = logical_to_spec(axes, rules)
+    sizes = rules.get("_axis_sizes")
+    if sizes:
+        parts = []
+        entries = list(tuple(spec)) + [None] * (x.ndim - len(tuple(spec)))
+        for dim, entry in enumerate(entries):
+            if entry is None:
+                parts.append(None)
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            prod = int(np.prod([sizes.get(n, 1) for n in names]))
+            parts.append(entry if (prod and x.shape[dim] % prod == 0) else None)
+        spec = P(*parts)
+    mesh = rules.get("_mesh")
+    if mesh is not None:
+        # explicit NamedSharding: works outside a `with mesh:` context too
+        # (the dry-run lowers without an ambient mesh).
+        return lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    try:
+        return lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):  # no ambient mesh (plain CPU tests)
+        return x
+
+
+def attach_axis_sizes(rules: dict[str, Any], mesh: Mesh) -> dict[str, Any]:
+    """Return a copy of rules carrying the mesh + axis sizes (for constrain)."""
+    return {
+        **rules,
+        "_mesh": mesh,
+        "_axis_sizes": {k: int(v) for k, v in mesh.shape.items()},
+    }
+
+
+def sanitize_spec(spec: P, shape: Sequence[int], mesh: Mesh) -> P:
+    """Drop spec entries that do not divide the dim (jit in_shardings must
+    divide exactly); the dim falls back to replicated."""
+    parts = []
+    entries = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            parts.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        prod = int(np.prod([mesh.shape[n] for n in names]))
+        parts.append(entry if (prod and dim % prod == 0) else None)
+    return P(*parts)
+
+
+def sanitize_specs(specs, shapes, mesh: Mesh):
+    """Tree-map sanitize_spec over (specs, ShapeDtypeStruct-tree)."""
+    return jax.tree.map(
+        lambda s, x: sanitize_spec(s, x.shape, mesh),
+        specs,
+        shapes,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# initializers & primitive layers (pure functions over param dicts)
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (the LLaMA/PaLM default)."""
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (std * jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def make_norm(cfg: ArchConfig, d: int):
+    """Returns (init_fn, apply_fn) for the configured norm type."""
+
+    def init(key):
+        p = {"scale": jnp.ones((d,), cfg.pdtype)}
+        if cfg.norm == "ln":
+            p["bias"] = jnp.zeros((d,), cfg.pdtype)
+        return p
+
+    def apply(p, x):
+        xf = x.astype(jnp.float32)
+        if cfg.norm == "ln":
+            mu = xf.mean(-1, keepdims=True)
+            var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+            y = (xf - mu) * lax.rsqrt(var + 1e-5)
+            y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+        else:
+            ms = (xf * xf).mean(-1, keepdims=True)
+            y = xf * lax.rsqrt(ms + 1e-6) * p["scale"].astype(jnp.float32)
+        return y.astype(x.dtype)
+
+    return init, apply
+
+
+def norm_axes(cfg: ArchConfig):
+    ax = {"scale": ("embed",)}
+    if cfg.norm == "ln":
+        ax["bias"] = ("embed",)
+    return ax
+
+
+def rope_tables(positions: jax.Array, head_dim: int, theta: float):
+    """cos/sin tables for the given absolute positions, (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, D); cos/sin: (S, D/2) broadcast over batch/heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :] if x.ndim == 4 else cos
+    s = sin[..., None, :] if x.ndim == 4 else sin
+    # broadcast (S, half) -> (..., S, H, half)
+    while c.ndim < x1.ndim:
+        c, s = c[None], s[None]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1).astype(x.dtype)
+
+
+def stack_init(init_fn, key, count: int):
+    """vmap an init over ``count`` layer keys -> params stacked on axis 0."""
+    keys = jax.random.split(key, count)
+    return jax.vmap(init_fn)(keys)
+
+
+def stacked_axes(axes_tree):
+    """Prepend the scanned 'layers' logical axis to every leaf's axes."""
+    return jax.tree.map(
+        lambda axes: ("layers",) + axes,
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )

@@ -1,0 +1,660 @@
+"""Composable LM stack: groups of scanned layers covering every assigned arch.
+
+A model is a sequence of *groups*; each group is (block_types, count) and is
+executed as one ``lax.scan`` over ``count`` stacked parameter sets (remat
+around the body when cfg.remat).  Non-uniform stacks compose groups:
+
+  dense            [("attn",) x L]
+  moe (granite)    [("attn_moe",) x L]
+  llama4           [("attn", "attn_moe") x L/2]   (alternating, ff 2x on dense)
+  rwkv6            [("rwkv",) x L]
+  zamba2 (hybrid)  [("mamba" x 6, "shared_attn") x 13] + [("mamba",) x 3]
+                   -- shared_attn params are NOT stacked (weight sharing);
+                   its KV caches ARE stacked per invocation.
+  seamless (encdec) enc: [("enc",) x 12]; dec: [("dec",) x 12]
+
+Three entry points per model: ``loss_fn`` (train), ``prefill`` + ``decode_step``
+(serve).  The loss is vocab-chunked: hidden states are scanned in sequence
+chunks so the (B, S, vocab) logits tensor never materializes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import mamba2 as mb
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.common import ArchConfig
+
+
+@dataclass(frozen=True)
+class GroupSpec:
+    block_types: tuple[str, ...]
+    count: int
+    # per-block-type overrides, e.g. {"attn": {"d_ff": 16384}}
+    overrides: tuple[tuple[str, Any], ...] = ()
+
+    def override(self, bt: str) -> dict:
+        return dict(self.overrides).get(bt, {})
+
+
+@dataclass(frozen=True)
+class LMSpec:
+    cfg: ArchConfig
+    groups: tuple[GroupSpec, ...]
+    enc_groups: tuple[GroupSpec, ...] = ()
+
+    @property
+    def is_encdec(self) -> bool:
+        return bool(self.enc_groups)
+
+    @property
+    def has_shared_attn(self) -> bool:
+        return any("shared_attn" in g.block_types for g in self.groups)
+
+
+def build_spec(cfg: ArchConfig) -> LMSpec:
+    if cfg.family == "encdec":
+        return LMSpec(
+            cfg=cfg,
+            groups=(GroupSpec(("dec",), cfg.dec_layers),),
+            enc_groups=(GroupSpec(("enc",), cfg.enc_layers),),
+        )
+    if cfg.family == "moe":
+        if cfg.moe_layer_step == 2:
+            # llama4-style: alternate dense (2x ff) and MoE layers
+            return LMSpec(
+                cfg=cfg,
+                groups=(
+                    GroupSpec(
+                        ("attn", "attn_moe"),
+                        cfg.n_layers // 2,
+                        overrides=(("attn", {"d_ff": 2 * cfg.d_ff}),),
+                    ),
+                ),
+            )
+        return LMSpec(cfg=cfg, groups=(GroupSpec(("attn_moe",), cfg.n_layers),))
+    if cfg.family == "ssm" and cfg.rwkv:
+        return LMSpec(cfg=cfg, groups=(GroupSpec(("rwkv",), cfg.n_layers),))
+    if cfg.family == "hybrid":
+        k = cfg.attn_every
+        full, rem = divmod(cfg.n_layers, k)
+        groups = [GroupSpec(tuple(["mamba"] * k + ["shared_attn"]), full)]
+        if rem:
+            groups.append(GroupSpec(("mamba",), rem))
+        return LMSpec(cfg=cfg, groups=tuple(groups))
+    # dense / vlm
+    return LMSpec(cfg=cfg, groups=(GroupSpec(("attn",), cfg.n_layers),))
+
+
+# ---------------------------------------------------------------------------
+# per-block init / axes / apply
+# ---------------------------------------------------------------------------
+
+
+def _shared_attn_cfg(cfg: ArchConfig) -> ArchConfig:
+    """Zamba's shared block attends over concat(h, emb0): d_in = 2*d_model."""
+    hd = 2 * cfg.d_model // cfg.n_heads
+    return cfg.replace(head_dim=hd, qk_norm=False, qkv_bias=False)
+
+
+def init_block(cfg: ArchConfig, bt: str, key, ov: dict):
+    ninit, _ = cm.make_norm(cfg, cfg.d_model)
+    ks = jax.random.split(key, 4)
+    if bt == "attn":
+        return {
+            "ln1": ninit(ks[0]),
+            "attn": attn.init_attention(cfg, ks[1]),
+            "ln2": ninit(ks[2]),
+            "mlp": mlp_mod.init_mlp(cfg, ks[3], d_ff=ov.get("d_ff")),
+        }
+    if bt == "attn_moe":
+        return {
+            "ln1": ninit(ks[0]),
+            "attn": attn.init_attention(cfg, ks[1]),
+            "ln2": ninit(ks[2]),
+            "moe": moe_mod.init_moe(cfg, ks[3]),
+        }
+    if bt == "mamba":
+        return {"ln": ninit(ks[0]), "mamba": mb.init_mamba(cfg, ks[1])}
+    if bt == "rwkv":
+        return {"ln1": ninit(ks[0]), "ln2": ninit(ks[1]), "rwkv": rwkv_mod.init_rwkv(cfg, ks[2])}
+    if bt == "enc":
+        return {
+            "ln1": ninit(ks[0]),
+            "attn": attn.init_attention(cfg, ks[1]),
+            "ln2": ninit(ks[2]),
+            "mlp": mlp_mod.init_mlp(cfg, ks[3]),
+        }
+    if bt == "dec":
+        ks = jax.random.split(key, 6)
+        return {
+            "ln1": ninit(ks[0]),
+            "attn": attn.init_attention(cfg, ks[1]),
+            "lnx": ninit(ks[2]),
+            "xattn": attn.init_attention(cfg, ks[3]),
+            "ln2": ninit(ks[4]),
+            "mlp": mlp_mod.init_mlp(cfg, ks[5]),
+        }
+    raise ValueError(f"unknown block type {bt!r}")
+
+
+def block_axes(cfg: ArchConfig, bt: str):
+    nx = cm.norm_axes(cfg)
+    if bt == "attn" or bt == "enc":
+        return {"ln1": nx, "attn": attn.attention_axes(cfg), "ln2": nx, "mlp": mlp_mod.mlp_axes(cfg)}
+    if bt == "attn_moe":
+        return {"ln1": nx, "attn": attn.attention_axes(cfg), "ln2": nx, "moe": moe_mod.moe_axes(cfg)}
+    if bt == "mamba":
+        return {"ln": nx, "mamba": mb.mamba_axes(cfg)}
+    if bt == "rwkv":
+        return {"ln1": nx, "ln2": nx, "rwkv": rwkv_mod.rwkv_axes(cfg)}
+    if bt == "dec":
+        return {
+            "ln1": nx,
+            "attn": attn.attention_axes(cfg),
+            "lnx": nx,
+            "xattn": attn.attention_axes(cfg),
+            "ln2": nx,
+            "mlp": mlp_mod.mlp_axes(cfg),
+        }
+    raise ValueError(bt)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(spec: LMSpec, key) -> dict:
+    cfg = spec.cfg
+    keys = jax.random.split(key, 8)
+    ninit, _ = cm.make_norm(cfg, cfg.d_model)
+    params: dict[str, Any] = {
+        "embed": cm.embed_init(keys[0], (cfg.vocab_padded, cfg.d_model), cfg.pdtype),
+        "final_norm": ninit(keys[1]),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = cm.dense_init(keys[2], (cfg.d_model, cfg.vocab_padded), cfg.pdtype)
+
+    def group_params(groups, key):
+        gps = []
+        for gi, g in enumerate(groups):
+            gk = jax.random.split(jax.random.fold_in(key, gi), len(g.block_types))
+            gp = {}
+            for bi, bt in enumerate(g.block_types):
+                if bt == "shared_attn":
+                    continue  # shared; initialized once below
+                gp[str(bi)] = cm.stack_init(
+                    lambda k, bt=bt, ov=g.override(bt): init_block(cfg, bt, k, ov),
+                    gk[bi],
+                    g.count,
+                )
+            gps.append(gp)
+        return gps
+
+    params["groups"] = group_params(spec.groups, keys[3])
+    if spec.enc_groups:
+        params["enc_groups"] = group_params(spec.enc_groups, keys[4])
+        params["enc_final_norm"] = ninit(keys[5])
+    if spec.has_shared_attn:
+        scfg = _shared_attn_cfg(cfg)
+        sn, _ = cm.make_norm(cfg, 2 * cfg.d_model)
+        sk = jax.random.split(keys[7], 3)
+        params["shared_attn"] = {
+            "ln": sn(keys[6]),
+            "attn": attn.init_attention(scfg, sk[0], d_in=2 * cfg.d_model),
+            "ln2": ninit(sk[1]),
+            "mlp": mlp_mod.init_mlp(cfg, sk[2]),  # zamba's shared-block FFN (d_ff)
+        }
+    return params
+
+
+def param_axes(spec: LMSpec) -> dict:
+    cfg = spec.cfg
+    nx = cm.norm_axes(cfg)
+    axes: dict[str, Any] = {"embed": ("vocab", "embed_d"), "final_norm": nx}
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("embed_d", "vocab")
+
+    def group_axes(groups):
+        gax = []
+        for g in groups:
+            gp = {}
+            for bi, bt in enumerate(g.block_types):
+                if bt == "shared_attn":
+                    continue
+                gp[str(bi)] = cm.stacked_axes(block_axes(cfg, bt))
+            gax.append(gp)
+        return gax
+
+    axes["groups"] = group_axes(spec.groups)
+    if spec.enc_groups:
+        axes["enc_groups"] = group_axes(spec.enc_groups)
+        axes["enc_final_norm"] = nx
+    if spec.has_shared_attn:
+        scfg = _shared_attn_cfg(cfg)
+        axes["shared_attn"] = {
+            "ln": nx,
+            "attn": attn.attention_axes(scfg),
+            "ln2": nx,
+            "mlp": mlp_mod.mlp_axes(cfg),
+        }
+    return axes
+
+
+def param_specs(spec: LMSpec, rules) -> dict:
+    return cm.tree_specs(param_axes(spec), rules)
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# forward blocks (train path: full sequence, no cache)
+# ---------------------------------------------------------------------------
+
+
+def _apply_block_train(cfg, spec, bt, bp, h, aux, *, rules, shared=None, emb0=None, enc_out=None, ov=None):
+    _, napply = cm.make_norm(cfg, cfg.d_model)
+    if bt == "attn" or bt == "enc":
+        causal = bt == "attn"
+        h = h + attn.attend_train(cfg, bp["attn"], napply(bp["ln1"], h), causal=causal, rules=rules)
+        h = h + mlp_mod.apply_mlp(cfg, bp["mlp"], napply(bp["ln2"], h), rules=rules)
+        return h, aux
+    if bt == "attn_moe":
+        h = h + attn.attend_train(cfg, bp["attn"], napply(bp["ln1"], h), rules=rules)
+        y, a = moe_mod.apply_moe(cfg, bp["moe"], napply(bp["ln2"], h), rules=rules)
+        h = h + y
+        aux = {k: aux.get(k, 0.0) + a[k] for k in a}
+        return h, aux
+    if bt == "mamba":
+        h = h + mb.apply_mamba(cfg, bp["mamba"], napply(bp["ln"], h), rules=rules)
+        return h, aux
+    if bt == "rwkv":
+        h = h + rwkv_mod.apply_rwkv_timemix(cfg, bp["rwkv"], napply(bp["ln1"], h), rules=rules)
+        h = h + rwkv_mod.apply_rwkv_channelmix(cfg, bp["rwkv"], napply(bp["ln2"], h), rules=rules)
+        return h, aux
+    if bt == "shared_attn":
+        scfg = _shared_attn_cfg(cfg)
+        _, napply2 = cm.make_norm(cfg, 2 * cfg.d_model)
+        zin = jnp.concatenate([h, emb0], axis=-1)
+        zin = napply2(shared["ln"], zin)
+        h = h + attn.attend_train(scfg, shared["attn"], zin, rules=rules)
+        h = h + mlp_mod.apply_mlp(cfg, shared["mlp"], napply(shared["ln2"], h), rules=rules)
+        return h, aux
+    if bt == "dec":
+        h = h + attn.attend_train(cfg, bp["attn"], napply(bp["ln1"], h), rules=rules)
+        kv = attn.project_kv(cfg, bp["xattn"], enc_out)
+        h = h + attn.attend_train(
+            cfg, bp["xattn"], napply(bp["lnx"], h), causal=False, rules=rules, kv_override=kv
+        )
+        h = h + mlp_mod.apply_mlp(cfg, bp["mlp"], napply(bp["ln2"], h), rules=rules)
+        return h, aux
+    raise ValueError(bt)
+
+
+def _run_groups_train(spec: LMSpec, params, groups_key, groups, h, *, rules, emb0=None, enc_out=None):
+    cfg = spec.cfg
+    aux0 = {"lb_loss": jnp.zeros((), jnp.float32), "z_loss": jnp.zeros((), jnp.float32)}
+    shared = params.get("shared_attn")
+
+    for gi, g in enumerate(groups):
+        gp = params[groups_key][gi]
+
+        def body(carry, xs, g=g):
+            h, aux = carry
+            for bi, bt in enumerate(g.block_types):
+                bp = xs.get(str(bi)) if bt != "shared_attn" else None
+                h, aux = _apply_block_train(
+                    cfg, spec, bt, bp, h, aux,
+                    rules=rules, shared=shared, emb0=emb0, enc_out=enc_out,
+                    ov=g.override(bt),
+                )
+            h = cm.constrain(h, ("batch", "seq", "embed"), rules)
+            return (h, aux), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (h, aux), _ = lax.scan(body_fn, (h, aux0), gp, length=g.count)
+        aux0 = aux
+    return h, aux0
+
+
+# ---------------------------------------------------------------------------
+# loss (vocab-chunked)
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(cfg: ArchConfig, params, tokens, rules):
+    h = params["embed"][tokens].astype(cfg.cdtype)
+    return cm.constrain(h, ("batch", "seq", "embed"), rules)
+
+
+def _unembed(cfg, params, h):
+    """Logits over the padded vocab; padding columns masked to -inf."""
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, w.astype(cfg.cdtype))
+    if cfg.vocab_padded != cfg.vocab:
+        pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+        logits = jnp.where(pad_mask, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+def _chunked_xent(cfg: ArchConfig, params, h, labels, rules):
+    """Cross-entropy without materializing (B, S, vocab) logits."""
+    b, s, d = h.shape
+    ck = min(cfg.vocab_chunk, s)
+    while s % ck:
+        ck //= 2
+    nc = s // ck
+    hc = jnp.moveaxis(h.reshape(b, nc, ck, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, ck), 1, 0)
+
+    def chunk_loss(carry, inp):
+        hh, ll = inp
+        logits = _unembed(cfg, params, hh).astype(jnp.float32)
+        # batch_inner: the batch axes that never collide with "vocab" (under
+        # full-flat FSDP the batch owns both mesh axes; the loss chunk cedes
+        # one back so logits/grad partials stay vocab-sharded)
+        logits = cm.constrain(logits, ("batch_inner", "seq", "vocab"), rules)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    fn = jax.checkpoint(chunk_loss) if cfg.remat else chunk_loss
+    total, _ = lax.scan(fn, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / (b * s)
+
+
+def loss_fn(spec: LMSpec, params, batch, *, rules=cm.DEFAULT_RULES):
+    """batch: tokens (B,S) int32, labels (B,S) int32 [+ frames (B,S,d)]."""
+    cfg = spec.cfg
+    if spec.is_encdec:
+        frames = batch["frames"].astype(cfg.cdtype)
+        frames = cm.constrain(frames, ("batch", "seq", "embed"), rules)
+        _, napply = cm.make_norm(cfg, cfg.d_model)
+        enc, _ = _run_groups_train(spec, params, "enc_groups", spec.enc_groups, frames, rules=rules)
+        enc = napply(params["enc_final_norm"], enc)
+        h = _embed_tokens(cfg, params, batch["tokens"], rules)
+        h, aux = _run_groups_train(spec, params, "groups", spec.groups, h, rules=rules, enc_out=enc)
+    else:
+        h = _embed_tokens(cfg, params, batch["tokens"], rules)
+        emb0 = h if spec.has_shared_attn else None
+        h, aux = _run_groups_train(spec, params, "groups", spec.groups, h, rules=rules, emb0=emb0)
+    _, napply = cm.make_norm(cfg, cfg.d_model)
+    h = napply(params["final_norm"], h)
+    xent = _chunked_xent(cfg, params, h, batch["labels"], rules)
+    loss = xent + 0.01 * aux["lb_loss"] + 0.001 * aux["z_loss"]
+    return loss, {"xent": xent, **aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode (cache pytrees stacked per group)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(spec: LMSpec, batch: int, s_max: int, *, enc_len: int = 0) -> dict:
+    """Decode caches, stacked (count, ...) per group."""
+    cfg = spec.cfg
+    nkv, hd = cfg.n_kv_heads, cfg.hd
+    dt = cfg.cdtype
+    caches = []
+    for g in spec.groups:
+        gc: dict[str, Any] = {}
+        for bi, bt in enumerate(g.block_types):
+            if bt in ("attn", "attn_moe", "dec"):
+                gc[str(bi)] = {
+                    "k": jnp.zeros((g.count, batch, s_max, nkv, hd), dt),
+                    "v": jnp.zeros((g.count, batch, s_max, nkv, hd), dt),
+                }
+                if bt == "dec":
+                    gc[str(bi)]["xk"] = jnp.zeros((g.count, batch, enc_len, nkv, hd), dt)
+                    gc[str(bi)]["xv"] = jnp.zeros((g.count, batch, enc_len, nkv, hd), dt)
+            elif bt == "mamba":
+                one = mb.mamba_cache_init(cfg, batch, dt)
+                gc[str(bi)] = jax.tree.map(lambda x: jnp.broadcast_to(x, (g.count,) + x.shape), one)
+            elif bt == "rwkv":
+                one = rwkv_mod.rwkv_cache_init(cfg, batch, dt)
+                gc[str(bi)] = jax.tree.map(lambda x: jnp.broadcast_to(x, (g.count,) + x.shape), one)
+            elif bt == "shared_attn":
+                scfg = _shared_attn_cfg(cfg)
+                gc[str(bi)] = {
+                    "k": jnp.zeros((g.count, batch, s_max, scfg.n_kv_heads, scfg.hd), dt),
+                    "v": jnp.zeros((g.count, batch, s_max, scfg.n_kv_heads, scfg.hd), dt),
+                }
+        caches.append(gc)
+    return {"groups": caches, "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_axes(spec: LMSpec) -> dict:
+    """Logical axes for cache sharding (kv_seq over 'model' = flash-decode)."""
+    caches = []
+    for g in spec.groups:
+        gc: dict[str, Any] = {}
+        for bi, bt in enumerate(g.block_types):
+            if bt in ("attn", "attn_moe", "dec", "shared_attn"):
+                e = {
+                    "k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                    "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                }
+                if bt == "dec":
+                    e["xk"] = ("layers", "batch", None, "kv_heads", "head_dim")
+                    e["xv"] = ("layers", "batch", None, "kv_heads", "head_dim")
+                gc[str(bi)] = e
+            elif bt == "mamba":
+                gc[str(bi)] = {
+                    "conv": ("layers", "batch", None, "inner"),
+                    "ssm": ("layers", "batch", "inner", None, None),
+                }
+            elif bt == "rwkv":
+                gc[str(bi)] = {
+                    "tm_prev": ("layers", "batch", None, "embed"),
+                    "cm_prev": ("layers", "batch", None, "embed"),
+                    "wkv": ("layers", "batch", "inner", None, None),
+                }
+        caches.append(gc)
+    return {"groups": caches, "pos": ()}
+
+
+def _write_prefill_kv(cache_kv, kv, s_max):
+    """Place prefill (k, v) of length S into the S_max cache buffers."""
+    k, v = kv
+    pad = [(0, 0), (0, s_max - k.shape[1]), (0, 0), (0, 0)]
+    return jnp.pad(k, pad), jnp.pad(v, pad)
+
+
+def prefill(spec: LMSpec, params, batch, s_max: int, *, rules=cm.DEFAULT_RULES):
+    """Run the prompt, return (last-position logits, cache)."""
+    cfg = spec.cfg
+    _, napply = cm.make_norm(cfg, cfg.d_model)
+    enc_out = None
+    if spec.is_encdec:
+        frames = batch["frames"].astype(cfg.cdtype)
+        enc_out, _ = _run_groups_train(spec, params, "enc_groups", spec.enc_groups, frames, rules=rules)
+        enc_out = napply(params["enc_final_norm"], enc_out)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = _embed_tokens(cfg, params, tokens, rules)
+    emb0 = h if spec.has_shared_attn else None
+    shared = params.get("shared_attn")
+
+    caches = []
+    for gi, g in enumerate(spec.groups):
+        gp = params["groups"][gi]
+
+        def body(carry, xs, g=g):
+            h = carry
+            gc = {}
+            for bi, bt in enumerate(g.block_types):
+                bp = xs.get(str(bi)) if bt != "shared_attn" else None
+                h, c = _apply_block_prefill(
+                    cfg, spec, bt, bp, h, s_max,
+                    rules=rules, shared=shared, emb0=emb0, enc_out=enc_out,
+                )
+                if c is not None:
+                    gc[str(bi)] = c
+            h = cm.constrain(h, ("batch", "seq", "embed"), rules)
+            return h, gc
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        h, gc = lax.scan(body_fn, h, gp, length=g.count)
+        caches.append(gc)
+
+    h = napply(params["final_norm"], h)
+    logits = _unembed(cfg, params, h[:, -1:, :])
+    cache = {"groups": caches, "pos": jnp.asarray(s, jnp.int32)}
+    if spec.is_encdec:
+        cache["enc_out"] = enc_out
+    return logits[:, 0], cache
+
+
+def _apply_block_prefill(cfg, spec, bt, bp, h, s_max, *, rules, shared, emb0, enc_out):
+    _, napply = cm.make_norm(cfg, cfg.d_model)
+    if bt in ("attn", "attn_moe"):
+        y, kv = attn.attend_prefill(cfg, bp["attn"], napply(bp["ln1"], h), rules=rules)
+        h = h + y
+        if bt == "attn":
+            h = h + mlp_mod.apply_mlp(cfg, bp["mlp"], napply(bp["ln2"], h), rules=rules)
+        else:
+            y2, _ = moe_mod.apply_moe(cfg, bp["moe"], napply(bp["ln2"], h), rules=rules)
+            h = h + y2
+        k, v = _write_prefill_kv(None, kv, s_max)
+        return h, {"k": k, "v": v}
+    if bt == "mamba":
+        x = napply(bp["ln"], h)
+        y, c = _mamba_prefill(cfg, bp["mamba"], x, rules=rules)
+        return h + y, c
+    if bt == "rwkv":
+        x1 = napply(bp["ln1"], h)
+        y1, tm_prev, wkv = _rwkv_tm_prefill(cfg, bp["rwkv"], x1, rules=rules)
+        h = h + y1
+        x2 = napply(bp["ln2"], h)
+        y2 = rwkv_mod.apply_rwkv_channelmix(cfg, bp["rwkv"], x2, rules=rules)
+        h = h + y2
+        return h, {"tm_prev": tm_prev, "cm_prev": x2[:, -1:, :], "wkv": wkv}
+    if bt == "shared_attn":
+        scfg = _shared_attn_cfg(cfg)
+        _, napply2 = cm.make_norm(cfg, 2 * cfg.d_model)
+        zin = napply2(shared["ln"], jnp.concatenate([h, emb0], axis=-1))
+        y, kv = attn.attend_prefill(scfg, shared["attn"], zin, rules=rules)
+        h = h + y
+        h = h + mlp_mod.apply_mlp(cfg, shared["mlp"], napply(shared["ln2"], h), rules=rules)
+        k, v = _write_prefill_kv(None, kv, s_max)
+        return h, {"k": k, "v": v}
+    if bt == "dec":
+        y, kv = attn.attend_prefill(cfg, bp["attn"], napply(bp["ln1"], h), rules=rules)
+        h = h + y
+        xk, xv = attn.project_kv(cfg, bp["xattn"], enc_out)
+        h = h + attn.attend_train(
+            cfg, bp["xattn"], napply(bp["lnx"], h), causal=False, rules=rules, kv_override=(xk, xv)
+        )
+        h = h + mlp_mod.apply_mlp(cfg, bp["mlp"], napply(bp["ln2"], h), rules=rules)
+        k, v = _write_prefill_kv(None, kv, s_max)
+        return h, {"k": k, "v": v, "xk": xk, "xv": xv}
+    raise ValueError(bt)
+
+
+def _mamba_prefill(cfg, p, x, *, rules):
+    """apply_mamba that also returns the decode cache (conv tail + state)."""
+    return mb.apply_mamba(cfg, p, x, rules=rules, return_cache=True)
+
+
+def _rwkv_tm_prefill(cfg, p, x, *, rules):
+    shifted = rwkv_mod._token_shift(x)
+    r, k, v, g, lw = rwkv_mod._time_mix_inputs(cfg, p, x, shifted)
+    y, s_fin = rwkv_mod.wkv_chunked(r, k, v, lw, p["u_bonus"], chunk=cfg.ssm_chunk)
+    y = rwkv_mod._group_norm(p, y) * g
+    out = jnp.einsum("bsd,de->bse", y.astype(cfg.cdtype), p["wo"].astype(cfg.cdtype))
+    return out, x[:, -1:, :], s_fin
+
+
+def decode_step(spec: LMSpec, params, token, cache, *, rules=cm.DEFAULT_RULES):
+    """One greedy decode step.  token (B,) int32 -> (logits (B,V), cache)."""
+    cfg = spec.cfg
+    _, napply = cm.make_norm(cfg, cfg.d_model)
+    pos = cache["pos"]
+    h = _embed_tokens(cfg, params, token[:, None], rules)
+    emb0 = h if spec.has_shared_attn else None
+    shared = params.get("shared_attn")
+    enc_out = cache.get("enc_out")
+
+    new_groups = []
+    for gi, g in enumerate(spec.groups):
+        gp = params["groups"][gi]
+        gc = cache["groups"][gi]
+
+        def body(carry, xs, g=g):
+            h = carry
+            bp_all, c_all = xs
+            c_new = {}
+            for bi, bt in enumerate(g.block_types):
+                bp = bp_all.get(str(bi)) if bt != "shared_attn" else None
+                c = c_all.get(str(bi))
+                h, cn = _apply_block_decode(
+                    cfg, spec, bt, bp, h, c, pos,
+                    rules=rules, shared=shared, emb0=emb0, enc_out=enc_out,
+                )
+                if cn is not None:
+                    c_new[str(bi)] = cn
+            return h, c_new
+
+        h, gc_new = lax.scan(body, h, (gp, gc), length=g.count)
+        new_groups.append(gc_new)
+
+    h = napply(params["final_norm"], h)
+    logits = _unembed(cfg, params, h)[:, 0]
+    new_cache = {"groups": new_groups, "pos": pos + 1}
+    if spec.is_encdec:
+        new_cache["enc_out"] = enc_out
+    return logits, new_cache
+
+
+def _apply_block_decode(cfg, spec, bt, bp, h, c, pos, *, rules, shared, emb0, enc_out):
+    _, napply = cm.make_norm(cfg, cfg.d_model)
+    if bt in ("attn", "attn_moe"):
+        y, (k, v) = attn.attend_decode(cfg, bp["attn"], napply(bp["ln1"], h), (c["k"], c["v"]), pos, rules=rules)
+        h = h + y
+        if bt == "attn":
+            h = h + mlp_mod.apply_mlp(cfg, bp["mlp"], napply(bp["ln2"], h), rules=rules)
+        else:
+            y2, _ = moe_mod.apply_moe(cfg, bp["moe"], napply(bp["ln2"], h), rules=rules)
+            h = h + y2
+        return h, {"k": k, "v": v}
+    if bt == "mamba":
+        y, cn = mb.apply_mamba_decode(cfg, bp["mamba"], napply(bp["ln"], h), c, rules=rules)
+        return h + y, cn
+    if bt == "rwkv":
+        x1 = napply(bp["ln1"], h)
+        y1, cn = rwkv_mod.apply_rwkv_timemix_decode(cfg, bp["rwkv"], x1, c, rules=rules)
+        h = h + y1
+        x2 = napply(bp["ln2"], h)
+        y2, cn = rwkv_mod.apply_rwkv_channelmix_decode(cfg, bp["rwkv"], x2, cn, rules=rules)
+        h = h + y2
+        return h, cn
+    if bt == "shared_attn":
+        scfg = _shared_attn_cfg(cfg)
+        _, napply2 = cm.make_norm(cfg, 2 * cfg.d_model)
+        zin = napply2(shared["ln"], jnp.concatenate([h, emb0], axis=-1))
+        y, (k, v) = attn.attend_decode(scfg, shared["attn"], zin, (c["k"], c["v"]), pos, rules=rules)
+        h = h + y
+        h = h + mlp_mod.apply_mlp(cfg, shared["mlp"], napply(shared["ln2"], h), rules=rules)
+        return h, {"k": k, "v": v}
+    if bt == "dec":
+        y, (k, v) = attn.attend_decode(cfg, bp["attn"], napply(bp["ln1"], h), (c["k"], c["v"]), pos, rules=rules)
+        h = h + y
+        h = h + attn.cross_attend_decode(cfg, bp["xattn"], napply(bp["lnx"], h), (c["xk"], c["xv"]), pos, rules=rules)
+        h = h + mlp_mod.apply_mlp(cfg, bp["mlp"], napply(bp["ln2"], h), rules=rules)
+        return h, {"k": k, "v": v, "xk": c["xk"], "xv": c["xv"]}
+    raise ValueError(bt)

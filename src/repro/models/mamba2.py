@@ -1,0 +1,248 @@
+"""Mamba2 (SSD) layer: chunked state-space dual form + one-step decode.
+
+The SSD recurrence per head h with scalar decay a_t = exp(dt_t * A_h):
+
+    H_t = a_t * H_{t-1} + dt_t * B_t (x) x_t          (H: (headdim, d_state))
+    y_t = C_t . H_t + D_h * x_t
+
+Chunked evaluation (chunk Q): intra-chunk is a masked (C B^T) "attention"
+with decay mask L[i,j] = exp(cum_i - cum_j); inter-chunk carries the state
+through a scan over chunks -- O(S Q) instead of O(S^2), all MXU matmuls.
+
+TP note: the input projections are SPLIT (w_z, w_x, w_b, w_c, w_dt) rather
+than one packed matrix so the wide ones (w_z, w_x: d -> d_inner) shard
+evenly over the "model" axis; the packed layout's odd total width
+(2*d_inner + 2*N + H) cannot.  Same math, shardable layout.
+
+``ssd_reference`` is the naive per-step scan used as the allclose oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import common as cm
+from repro.models.common import ArchConfig
+
+_CONV_K = 4
+
+
+def _dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_headdim
+    return d_inner, n_heads, cfg.ssm_state
+
+
+def init_mamba(cfg: ArchConfig, key):
+    d = cfg.d_model
+    d_inner, nh, ds = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": cm.dense_init(ks[0], (d, d_inner), cfg.pdtype),  # gate
+        "w_x": cm.dense_init(ks[1], (d, d_inner), cfg.pdtype),
+        "w_b": cm.dense_init(ks[2], (d, ds), cfg.pdtype),
+        "w_c": cm.dense_init(ks[3], (d, ds), cfg.pdtype),
+        "w_dt": cm.dense_init(ks[4], (d, nh), cfg.pdtype),
+        "conv_wx": (0.1 * jax.random.normal(ks[5], (d_inner, _CONV_K), jnp.float32)).astype(cfg.pdtype),
+        "conv_wbc": (0.1 * jax.random.normal(ks[6], (2 * ds, _CONV_K), jnp.float32)).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((d_inner + 2 * ds,), cfg.pdtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.ones((d_inner,), cfg.pdtype),
+        "w_out": cm.dense_init(ks[7], (d_inner, d), cfg.pdtype),
+    }
+
+
+def mamba_axes(cfg: ArchConfig):
+    return {
+        "w_z": ("embed_p", "inner"),
+        "w_x": ("embed_p", "inner"),
+        "w_b": ("embed_p", None),
+        "w_c": ("embed_p", None),
+        "w_dt": ("embed_p", None),
+        "conv_wx": ("inner", None),
+        "conv_wbc": (None, None),
+        "conv_b": (None,),
+        "a_log": ("state",),
+        "d_skip": ("state",),
+        "dt_bias": ("state",),
+        "norm": ("inner",),
+        "w_out": ("inner", "embed_p"),
+    }
+
+
+def _project(cfg: ArchConfig, p, x):
+    """x (B,S,d) -> (z, x_in, b, c, dt_raw) pre-conv projections."""
+    dt = cfg.cdtype
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"].astype(dt))
+    xi = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(dt))
+    b = jnp.einsum("bsd,dn->bsn", x, p["w_b"].astype(dt))
+    c = jnp.einsum("bsd,dn->bsn", x, p["w_c"].astype(dt))
+    dtr = jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(dt))
+    return z, xi, b, c, dtr
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv, kernel _CONV_K; u (B, S, C), w (C, K)."""
+    pad = jnp.pad(u, ((0, 0), (_CONV_K - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + u.shape[1], :] * w[None, None, :, i].astype(u.dtype)
+        for i in range(_CONV_K)
+    )
+    return out + b.astype(u.dtype)
+
+
+def _conv_all(cfg, p, xi, b, c):
+    """Conv x with the sharded filter, (B, C) jointly with the tiny one."""
+    d_inner, _, ds = _dims(cfg)
+    bx = p["conv_b"][:d_inner]
+    bbc = p["conv_b"][d_inner:]
+    xi = _causal_conv(xi, p["conv_wx"], bx)
+    bc = _causal_conv(jnp.concatenate([b, c], -1), p["conv_wbc"], bbc)
+    xi = jax.nn.silu(xi.astype(jnp.float32)).astype(xi.dtype)
+    bc = jax.nn.silu(bc.astype(jnp.float32)).astype(bc.dtype)
+    return xi, bc[..., :ds], bc[..., ds:]
+
+
+def _gated_norm(p, y, z):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * lax.rsqrt((yf * yf).mean(-1, keepdims=True) + 1e-6)
+    return yf * p["norm"].astype(jnp.float32)
+
+
+def ssd_chunked(x, dt, a_log, b_mat, c_mat, d_skip, *, chunk: int, h0=None):
+    """SSD core.  x (B,S,H,P); dt (B,S,H); b/c (B,S,N); returns (y, h_final).
+
+    h0 / h_final: (B, H, P, N) inter-chunk state.
+    """
+    bs, s, nh, hd = x.shape
+    ds = b_mat.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+
+    la = (-jnp.exp(a_log)[None, None, :] * dt).reshape(bs, nc, q, nh)  # log a_t
+    xc = x.reshape(bs, nc, q, nh, hd)
+    dtc = dt.reshape(bs, nc, q, nh)
+    bc = b_mat.reshape(bs, nc, q, ds)
+    cc = c_mat.reshape(bs, nc, q, ds)
+
+    cum = jnp.cumsum(la, axis=2)  # (B,nc,Q,H) inclusive
+    # intra-chunk: Y[i] = sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) dt_j x_j
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # (B,nc,Q,Q)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,i,j,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    # mask the EXPONENT (not the exp): exp(+large) at masked (i<j) positions
+    # would be inf, and where(mask, inf, 0) has NaN gradients (0 * inf).
+    decay = jnp.where(mask[None, None, :, :, None], decay, -jnp.inf)
+    lmat = jnp.exp(decay)
+    y_intra = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp", scores, lmat, dtc, xc)
+
+    # chunk states: S_c = sum_j exp(cum_Q - cum_j) dt_j B_j (x) x_j
+    tail = jnp.exp(cum[:, :, -1:, :] - cum) * dtc  # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", tail, bc, xc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
+
+    def carry_fn(h, inp):
+        s_c, dec = inp  # (B,H,P,N), (B,H)
+        h_new = h * dec[..., None, None] + s_c
+        return h_new, h
+
+    h_init = h0 if h0 is not None else jnp.zeros((bs, nh, hd, ds), x.dtype)
+    h_fin, h_prevs = lax.scan(
+        carry_fn,
+        h_init.astype(jnp.float32),
+        (jnp.moveaxis(s_chunk, 1, 0).astype(jnp.float32), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (B,nc,H,P,N) state entering chunk
+
+    # inter-chunk: Y_inter[i] = exp(cum_i) * C_i . H_prev
+    y_inter = jnp.einsum(
+        "bcih,bcin,bchpn->bcihp", jnp.exp(cum), cc, h_prevs.astype(x.dtype)
+    )
+    y = (y_intra + y_inter).reshape(bs, s, nh, hd)
+    y = y + d_skip[None, None, :, None] * x
+    return y, h_fin.astype(x.dtype)
+
+
+def ssd_reference(x, dt, a_log, b_mat, c_mat, d_skip, h0=None):
+    """Naive per-step recurrence (oracle for tests)."""
+    bs, s, nh, hd = x.shape
+    ds = b_mat.shape[-1]
+    h = h0 if h0 is not None else jnp.zeros((bs, nh, hd, ds), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P),(B,H),(B,N),(B,N)
+        a = jnp.exp(-jnp.exp(a_log)[None, :] * dtt)  # (B,H)
+        h = h * a[..., None, None] + jnp.einsum("bh,bn,bhp->bhpn", dtt, bt, xt)
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(b_mat.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(c_mat.astype(jnp.float32), 1, 0),
+    )
+    h, ys = lax.scan(step, h.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1) + d_skip[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), h.astype(x.dtype)
+
+
+def apply_mamba(cfg: ArchConfig, p, x, *, rules=cm.DEFAULT_RULES, return_cache: bool = False):
+    """Training / prefill forward; x (B, S, d) -> (B, S, d) [, cache]."""
+    d_inner, nh, ds = _dims(cfg)
+    dt_ = cfg.cdtype
+    z, xi, b, c, dtr = _project(cfg, p, x)
+    conv_tail = jnp.concatenate([xi, b, c], -1)[:, -(_CONV_K - 1):, :]
+    xi, b, c = _conv_all(cfg, p, xi, b, c)
+    dt_pos = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    xi = cm.constrain(xi, ("batch", "seq", "inner"), rules)
+    y, h_fin = ssd_chunked(
+        xi.reshape(*xi.shape[:2], nh, cfg.ssm_headdim),
+        dt_pos, p["a_log"], b, c, p["d_skip"], chunk=cfg.ssm_chunk,
+    )
+    y = _gated_norm(p, y.reshape(*xi.shape[:2], d_inner), z)
+    out = jnp.einsum("bse,ed->bsd", y.astype(dt_), p["w_out"].astype(dt_))
+    if return_cache:
+        return out, {"conv": conv_tail, "ssm": h_fin}
+    return out
+
+
+def mamba_cache_init(cfg: ArchConfig, batch: int, dtype):
+    d_inner, nh, ds = _dims(cfg)
+    conv_dim = d_inner + 2 * ds
+    return {
+        "conv": jnp.zeros((batch, _CONV_K - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, cfg.ssm_headdim, ds), dtype),
+    }
+
+
+def apply_mamba_decode(cfg: ArchConfig, p, x, cache, *, rules=cm.DEFAULT_RULES):
+    """One-token step; x (B, 1, d); returns (y, new_cache)."""
+    d_inner, nh, ds = _dims(cfg)
+    dt_ = cfg.cdtype
+    z, xi, b, c, dtr = _project(cfg, p, x)
+    new_row = jnp.concatenate([xi, b, c], -1)  # (B, 1, conv_dim)
+    win = jnp.concatenate([cache["conv"], new_row], axis=1)  # (B, K, conv_dim)
+    w_full = jnp.concatenate([p["conv_wx"], p["conv_wbc"]], axis=0)
+    out = jnp.einsum("bkc,ck->bc", win.astype(jnp.float32), w_full.astype(jnp.float32))
+    act = jax.nn.silu(out + p["conv_b"].astype(jnp.float32))[:, None, :].astype(dt_)
+    xi1, b1, c1 = act[..., :d_inner], act[..., d_inner:d_inner + ds], act[..., d_inner + ds:]
+    dt_pos = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"][None, None, :])
+
+    xt = xi1.reshape(-1, nh, cfg.ssm_headdim).astype(jnp.float32)
+    a = jnp.exp(-jnp.exp(p["a_log"])[None, :] * dt_pos[:, 0])  # (B,H)
+    h = cache["ssm"].astype(jnp.float32) * a[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt_pos[:, 0], b1[:, 0].astype(jnp.float32), xt
+    )
+    y = jnp.einsum("bn,bhpn->bhp", c1[:, 0].astype(jnp.float32), h)
+    y = y + p["d_skip"][None, :, None] * xt
+    y = _gated_norm(p, y.reshape(-1, 1, d_inner), z)
+    out = jnp.einsum("bse,ed->bsd", y.astype(dt_), p["w_out"].astype(dt_))
+    new_cache = {"conv": win[:, 1:, :], "ssm": h.astype(cache["ssm"].dtype)}
+    return out, new_cache

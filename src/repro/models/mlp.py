@@ -1,0 +1,36 @@
+"""SwiGLU MLP (the dense FFN used by every assigned transformer)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.common import ArchConfig
+
+
+def init_mlp(cfg: ArchConfig, key, *, d_ff: int | None = None):
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": cm.dense_init(ks[0], (cfg.d_model, f), cfg.pdtype),
+        "w_up": cm.dense_init(ks[1], (cfg.d_model, f), cfg.pdtype),
+        "w_down": cm.dense_init(ks[2], (f, cfg.d_model), cfg.pdtype),
+    }
+
+
+def mlp_axes(cfg: ArchConfig):
+    return {
+        "w_gate": ("embed_p", "ff"),
+        "w_up": ("embed_p", "ff"),
+        "w_down": ("ff", "embed_p"),
+    }
+
+
+def apply_mlp(cfg: ArchConfig, p, x, *, rules=cm.DEFAULT_RULES):
+    dt = cfg.cdtype
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    h = cm.constrain(h, ("batch", "seq", "ff"), rules)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))

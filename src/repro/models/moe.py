@@ -1,0 +1,307 @@
+"""Mixture-of-Experts with capacity-based scatter dispatch (EP over "model").
+
+Routing: softmax router, top-k experts per token, position-in-expert by a
+cumulative-sum priority, tokens beyond capacity dropped (standard Switch/GShard
+semantics).  Dispatch/combine are scatter/gather ``.at[]`` ops on an
+(E, C, d) buffer -- XLA lowers the cross-shard movement to an all-to-all when
+experts are sharded over "model" and tokens over "data".
+
+Aux losses: load-balancing (Switch LB = E * sum_e f_e * p_e) and router
+z-loss, both returned for the trainer to weight.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common as cm
+from repro.models.common import ArchConfig
+
+
+def init_moe(cfg: ArchConfig, key):
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_expert or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": cm.dense_init(ks[0], (d, e), jnp.float32),  # router in fp32
+        "w_gate": cm.dense_init(ks[1], (e, d, f), cfg.pdtype),
+        "w_up": cm.dense_init(ks[2], (e, d, f), cfg.pdtype),
+        "w_down": cm.dense_init(ks[3], (e, f, d), cfg.pdtype),
+    }
+    if cfg.n_shared_experts:
+        from repro.models.mlp import init_mlp
+
+        f_shared = (cfg.d_expert or cfg.d_ff) * cfg.n_shared_experts
+        p["shared"] = init_mlp(cfg, ks[4], d_ff=f_shared)
+    return p
+
+
+def moe_axes(cfg: ArchConfig):
+    ax = {
+        "router": ("embed_p", "experts"),
+        "w_gate": ("experts", "expert_embed", "expert_ff"),
+        "w_up": ("experts", "expert_embed", "expert_ff"),
+        "w_down": ("experts", "expert_ff", "expert_embed"),
+    }
+    if cfg.n_shared_experts:
+        from repro.models.mlp import mlp_axes
+
+        ax["shared"] = mlp_axes(cfg)
+    return ax
+
+
+def _moe_local(cfg: ArchConfig, p, xt, *, e_total, e_loc, e_offset, k, cap):
+    """Shard-local routing + dispatch + expert FFNs.
+
+    xt (t, d): this shard's tokens.  Routing is GLOBAL (router sees all
+    ``e_total`` experts); this shard owns experts [e_offset, e_offset+e_loc)
+    whose weights are the (sliced) w_* in ``p``.  Contributions to non-local
+    experts are dropped by the scatter's out-of-bounds ``mode="drop"`` --
+    tokens are model-replicated, so every expert shard sees every token and
+    no all-to-all is needed; the partial outputs psum outside.
+
+    Returns (y_partial (t, d), aux).
+    """
+    t, d = xt.shape
+    dt = cfg.cdtype
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = lax.top_k(probs, k)  # (t, k) over e_total
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # per-expert positions: local cumsum priority over this shard's tokens
+    onehot = jax.nn.one_hot(expert_ids, e_total, dtype=jnp.int32)  # (t, k, e)
+    flat = onehot.reshape(t * k, e_total)
+    pos_flat = jnp.cumsum(flat, axis=0) - flat  # exclusive
+    position = (pos_flat.reshape(t, k, e_total) * onehot).sum(-1)  # (t, k)
+    keep = position < cap
+
+    # dispatch into the LOCAL (e_loc, C, d) buffer; non-local experts are
+    # redirected to row e_loc (out of bounds HIGH -> dropped; negative
+    # indices would WRAP python-style, so they cannot be used for dropping)
+    local_ids = expert_ids - e_offset
+    owned = (local_ids >= 0) & (local_ids < e_loc)
+    dispatch_ids = jnp.where(owned, local_ids, e_loc)
+    buf = jnp.zeros((e_loc, cap, d), dt)
+    safe_pos = jnp.where(keep, position, cap - 1)
+    contrib = jnp.where(keep[..., None], xt[:, None, :].astype(dt), 0)
+    buf = buf.at[dispatch_ids, safe_pos].add(contrib, mode="drop")
+
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dt))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt))
+
+    take = owned & keep
+    gathered = out_buf[jnp.clip(local_ids, 0, e_loc - 1), safe_pos]  # (t, k, d)
+    w = (gate_vals * take).astype(jnp.float32)[..., None]
+    y = (gathered.astype(jnp.float32) * w).sum(axis=1).astype(dt)
+
+    me = probs.mean(axis=0)
+    ce = (onehot.sum(1) > 0).astype(jnp.float32).mean(axis=0)
+    lb_loss = e_total * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return y, {"lb_loss": lb_loss, "z_loss": z_loss}
+
+
+def _apply_moe_gathered(cfg: ArchConfig, p, x, *, rules, mesh, e_ax, d_ax, batch_axes):
+    """Decode-path MoE: move the (tiny) token batch, never the weights.
+
+    Weight in_specs MATCH the 2-axis storage (experts over ``e_ax``, d_model
+    over ``d_ax``), so entering the shard_map moves ZERO weight bytes --
+    vs the train path's per-layer d-gather, which at decode (one token per
+    step) re-gathers GBs of expert weights per token.  Tokens are
+    all-gathered (KBs), each d-shard contracts its slice, h psums over the
+    d axis, combine psums over the expert axis.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    n_e = mesh.shape[e_ax]
+    n_d = mesh.shape[d_ax]
+    e_loc, d_loc = e // n_e, d // n_d
+    f_dim = cfg.d_expert or cfg.d_ff
+    t = b * s
+    cap = max(4, min(int(cfg.capacity_factor * t * k / e), t))
+    dt = cfg.cdtype
+
+    def local(x_loc, wp):
+        xt = x_loc.reshape(-1, d)
+        xt_all = lax.all_gather(xt, batch_axes, axis=0, tiled=True)  # (t, d)
+        logits = jnp.einsum("td,de->te", xt_all.astype(jnp.float32), wp["router"])
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, expert_ids = lax.top_k(probs, k)
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+        onehot = jax.nn.one_hot(expert_ids, e, dtype=jnp.int32)
+        flat = onehot.reshape(t * k, e)
+        pos_flat = jnp.cumsum(flat, axis=0) - flat
+        position = (pos_flat.reshape(t, k, e) * onehot).sum(-1)
+        keep = position < cap
+
+        e_off = lax.axis_index(e_ax) * e_loc
+        local_ids = expert_ids - e_off
+        owned = (local_ids >= 0) & (local_ids < e_loc)
+        dispatch_ids = jnp.where(owned, local_ids, e_loc)
+
+        r_d = lax.axis_index(d_ax)
+        xt_d = lax.dynamic_slice_in_dim(xt_all, r_d * d_loc, d_loc, axis=1)
+        buf = jnp.zeros((e_loc, cap, d_loc), dt)
+        safe_pos = jnp.where(keep, position, cap - 1)
+        contrib = jnp.where(keep[..., None], xt_d[:, None, :].astype(dt), 0)
+        buf = buf.at[dispatch_ids, safe_pos].add(contrib, mode="drop")
+
+        # d-partial expert GEMMs; h exact after psum over the d axis
+        g = jnp.einsum("ecd,edf->ecf", buf, wp["w_gate"].astype(dt))
+        u = jnp.einsum("ecd,edf->ecf", buf, wp["w_up"].astype(dt))
+        g = lax.psum(g, d_ax)
+        u = lax.psum(u, d_ax)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+        out_buf = jnp.einsum("ecf,efd->ecd", h, wp["w_down"].astype(dt))  # (e_loc,C,d_loc)
+
+        take = owned & keep
+        gathered = out_buf[jnp.clip(local_ids, 0, e_loc - 1), safe_pos]
+        w = (gate_vals * take).astype(jnp.float32)[..., None]
+        y_all = (gathered.astype(jnp.float32) * w).sum(axis=1).astype(dt)  # (t, d_loc)
+        y_all = lax.psum(y_all, e_ax)
+
+        me = probs.mean(axis=0)
+        ce = (onehot.sum(1) > 0).astype(jnp.float32).mean(axis=0)
+        aux = {
+            "lb_loss": e * jnp.sum(me * ce),
+            "z_loss": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+        }
+        return y_all, aux
+
+    wspec = {
+        "router": P(),
+        "w_gate": P(e_ax, d_ax, None),
+        "w_up": P(e_ax, d_ax, None),
+        "w_down": P(e_ax, None, d_ax),
+    }
+    xspec = P(batch_axes, None, None)
+    wp = {kk: p[kk] for kk in ("router", "w_gate", "w_up", "w_down")}
+    y_all, aux = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(xspec, wspec),
+        out_specs=(P(None, d_ax), jax.tree.map(lambda _: P(), {"lb_loss": 0, "z_loss": 0})),
+        check_vma=False,
+    )(x, wp)
+    # back to batch-sharded layout (tiny resharding collective)
+    y = cm.constrain(y_all.reshape(b, s, d), ("batch", "seq", "embed"), rules)
+    return y, aux
+
+
+def apply_moe(cfg: ArchConfig, p, x, *, rules=cm.DEFAULT_RULES):
+    """x (B, S, d) -> (y (B, S, d), aux dict with lb_loss / z_loss).
+
+    Distribution (manual shard_map; the GSPMD scatter lowering of capacity
+    dispatch is pathological, all-gathering every contribution):
+
+      - tokens: sharded over the batch axes, replicated over "model"
+      - experts: if E divides the "model" axis -> expert parallelism (each
+        model shard owns E_loc experts and processes every token routed to
+        them; psum over "model" combines -- no all-to-all since tokens are
+        already replicated there)
+      - else (fine-grained experts, e.g. granite-moe's 40): expert weights
+        replicated over "model" with the expert FFN dim f sharded instead
+        (psum over "model" on the f contraction)
+      - capacity is per batch-shard (the standard EP formulation)
+
+    On a plain context (no mesh in rules) the same math runs locally.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    mesh = rules.get("_mesh") if isinstance(rules, dict) else None
+
+    def cap_for(t):
+        c = int(cfg.capacity_factor * t * k / e)
+        return max(4, min(c, t))
+
+    if mesh is None:
+        xt = x.reshape(b * s, d)
+        y, aux = _moe_local(cfg, p, xt, e_total=e, e_loc=e, e_offset=0, k=k,
+                            cap=cap_for(b * s))
+    elif rules.get("moe_gathered"):
+        e_ax = rules.get("experts")
+        d_ax = rules.get("expert_embed")
+        d_ax = d_ax if isinstance(d_ax, str) else None
+        batch_axes = rules.get("batch") or ()
+        batch_axes = batch_axes if isinstance(batch_axes, tuple) else (batch_axes,)
+        batch_axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+        ok = (
+            e_ax in mesh.axis_names and e % mesh.shape[e_ax] == 0
+            and d_ax in mesh.axis_names and d % mesh.shape[d_ax] == 0
+            and batch_axes and b % int(np.prod([mesh.shape[a] for a in batch_axes])) == 0
+        )
+        if ok:
+            yg, aux = _apply_moe_gathered(
+                cfg, p, x, rules=rules, mesh=mesh, e_ax=e_ax, d_ax=d_ax,
+                batch_axes=batch_axes,
+            )
+            return _shared_expert_add(cfg, p, x, yg, rules), aux
+        return apply_moe(cfg, p, x, rules={k_: v for k_, v in rules.items() if k_ != "moe_gathered"})
+    else:
+        batch_axes = rules.get("batch") or ()
+        batch_axes = batch_axes if isinstance(batch_axes, tuple) else (batch_axes,)
+        batch_axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+        if batch_axes and b % int(np.prod([mesh.shape[a] for a in batch_axes])):
+            batch_axes = ()
+        n_batch = int(np.prod([mesh.shape[a] for a in batch_axes])) if batch_axes else 1
+        t_loc = b * s // n_batch
+        cap = cap_for(t_loc)
+
+        e_ax = rules.get("experts")
+        if e_ax is not None and e % mesh.shape.get(e_ax, 1):
+            e_ax = None  # cannot shard the expert dim evenly
+        f_dim = cfg.d_expert or cfg.d_ff
+        f_ax = rules.get("expert_ff") if e_ax is None else None
+        if f_ax is not None and f_dim % mesh.shape.get(f_ax, 1):
+            f_ax = None
+        n_e = mesh.shape[e_ax] if e_ax else 1
+        reduce_axes = tuple(a for a in (e_ax, f_ax) if a is not None)
+
+        wspec = {
+            "router": P(),
+            "w_gate": P(e_ax, None, f_ax),
+            "w_up": P(e_ax, None, f_ax),
+            "w_down": P(e_ax, f_ax, None),
+        }
+
+        def local(xt, wp):
+            off = lax.axis_index(e_ax) * (e // n_e) if e_ax else 0
+            y, aux = _moe_local(
+                cfg, wp, xt.reshape(-1, d),
+                e_total=e, e_loc=e // n_e, e_offset=off, k=k, cap=cap,
+            )
+            if reduce_axes:
+                y = lax.psum(y, reduce_axes)
+            if batch_axes:
+                aux = jax.tree.map(lambda v: lax.pmean(v, batch_axes), aux)
+            return y.reshape(xt.shape), aux
+
+        xspec = P(batch_axes if batch_axes else None, None, None)
+        wp = {kk: p[kk] for kk in ("router", "w_gate", "w_up", "w_down")}
+        y, aux = jax.shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(xspec, wspec),
+            out_specs=(xspec, jax.tree.map(lambda _: P(), {"lb_loss": 0, "z_loss": 0})),
+            check_vma=False,
+        )(x, wp)
+        y = y.reshape(b * s, d)
+
+    y = _shared_expert_add(cfg, p, x, y.reshape(b, s, d), rules)
+    return y, aux
+
+
+def _shared_expert_add(cfg, p, x, y, rules):
+    """y (B,S,d) += shared-expert MLP(x) when the arch has one."""
+    if cfg.n_shared_experts:
+        from repro.models.mlp import apply_mlp
+
+        return y + apply_mlp(cfg, p["shared"], x, rules=rules)
+    return y

@@ -1,0 +1,252 @@
+"""RWKV6 ("Finch") layer: data-dependent decay, token shift, chunked WKV.
+
+Time-mix per head (dk = dv = head_dim), with per-channel decay w_t computed
+from the token via a LoRA bottleneck (the Finch contribution):
+
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t
+    y_t = r_t . (S_{t-1} + diag(u) k_t (x) v_t)
+
+Chunked evaluation: within a chunk the pairwise decay ratio
+exp(lw_{t-1} - lw_i) (lw = cumulative log decay) turns the recurrence into two
+masked matmuls plus a carried (dk, dv) state per head -- O(S*C) MXU work.
+
+``wkv_reference`` is the per-step scan oracle used by tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import common as cm
+from repro.models.common import ArchConfig
+
+_LORA_R = 64
+
+
+def _dims(cfg: ArchConfig):
+    hd = cfg.rwkv_head_dim
+    nh = cfg.d_model // hd
+    return nh, hd
+
+
+def init_rwkv(cfg: ArchConfig, key):
+    d = cfg.d_model
+    nh, hd = _dims(cfg)
+    ks = jax.random.split(key, 12)
+    p = {
+        # token-shift mix coefficients for r, k, v, w, g
+        "mix": 0.5 * jnp.ones((5, d), cfg.pdtype),
+        "wr": cm.dense_init(ks[0], (d, d), cfg.pdtype),
+        "wk": cm.dense_init(ks[1], (d, d), cfg.pdtype),
+        "wv": cm.dense_init(ks[2], (d, d), cfg.pdtype),
+        "wg": cm.dense_init(ks[3], (d, d), cfg.pdtype),
+        "wo": cm.dense_init(ks[4], (d, d), cfg.pdtype),
+        # data-dependent decay LoRA: w = base + B(tanh(A x))
+        "w_base": -6.0 * jnp.ones((d,), jnp.float32),
+        "w_lora_a": cm.dense_init(ks[5], (d, _LORA_R), jnp.float32),
+        "w_lora_b": (0.01 * jax.random.normal(ks[6], (_LORA_R, d), jnp.float32)),
+        "u_bonus": (0.1 * jax.random.normal(ks[7], (nh, hd), jnp.float32)),
+        "ln_x": jnp.ones((d,), cfg.pdtype),
+        # channel-mix
+        "cm_mix": 0.5 * jnp.ones((2, d), cfg.pdtype),
+        "cm_k": cm.dense_init(ks[8], (d, cfg.d_ff), cfg.pdtype),
+        "cm_v": cm.dense_init(ks[9], (cfg.d_ff, d), cfg.pdtype),
+        "cm_r": cm.dense_init(ks[10], (d, d), cfg.pdtype),
+    }
+    return p
+
+
+def rwkv_axes(cfg: ArchConfig):
+    return {
+        "mix": (None, "embed_p"),
+        "wr": ("embed_p", "inner"),
+        "wk": ("embed_p", "inner"),
+        "wv": ("embed_p", "inner"),
+        "wg": ("embed_p", "inner"),
+        "wo": ("inner", "embed_p"),
+        "w_base": ("inner",),
+        "w_lora_a": ("embed_p", None),
+        "w_lora_b": (None, "inner"),
+        "u_bonus": (None, None),
+        "ln_x": ("inner",),
+        "cm_mix": (None, "embed_p"),
+        "cm_k": ("embed_p", "ff"),
+        "cm_v": ("ff", "embed_p"),
+        "cm_r": ("embed_p", "inner"),
+    }
+
+
+def _token_shift(x, prev=None):
+    """Shift right by one along S; ``prev`` (B,1,d) feeds position 0."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def wkv_chunked(r, k, v, lw, u, *, chunk: int, s0=None):
+    """Chunked WKV.  r/k (B,S,H,K), v (B,S,H,V), lw (B,S,H,K) log-decay <= 0.
+
+    Returns (y (B,S,H,V), s_final (B,H,K,V)).
+    """
+    b, s, nh, dk = r.shape
+    dv = v.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+    rc = r.reshape(b, nc, q, nh, dk).astype(jnp.float32)
+    kc = k.reshape(b, nc, q, nh, dk).astype(jnp.float32)
+    vc = v.reshape(b, nc, q, nh, dv).astype(jnp.float32)
+    lwc = lw.reshape(b, nc, q, nh, dk)
+
+    cum = jnp.cumsum(lwc, axis=2)  # inclusive cumulative log decay
+    # intra-chunk: A[t,i] = sum_K r_t * exp(cum_{t-1} - cum_i) * k_i  (i < t)
+    cum_tm1 = cum - lwc  # exclusive cumsum (cum_{t-1})
+    r_dec = rc * jnp.exp(cum_tm1)  # r_t (x) prod_{j<t} w_j
+    # clamp the positive exponent: with strong decay exp(-cum) overflows for
+    # late chunk positions; valid (i < t) pairs always combine to <= 1, and
+    # masked pairs are zeroed below -- the clamp only keeps them finite so
+    # the where() gradient is not 0 * inf = NaN.
+    k_dec = kc * jnp.exp(jnp.minimum(-cum, 40.0))
+    scores = jnp.einsum("bcthk,bcihk->bcthi", r_dec, k_dec)
+    mask = jnp.tril(jnp.ones((q, q), bool), k=-1)  # strictly lower
+    scores = jnp.where(mask[None, None, :, None, :], scores, 0.0)
+    bonus = jnp.einsum("bcthk,hk,bcthk->bcth", rc, u.astype(jnp.float32), kc)
+    y_intra = jnp.einsum("bcthi,bcihv->bcthv", scores, vc) + bonus[..., None] * vc
+
+    # chunk state contribution: S_c = sum_i diag(W_Q / W_i) k_i (x) v_i
+    tail = jnp.exp(cum[:, :, -1:, :, :] - cum)  # (b,nc,q,h,k)
+    s_chunk = jnp.einsum("bcihk,bcihk,bcihv->bchkv", tail, kc, vc)
+    chunk_decay = jnp.exp(cum[:, :, -1])  # (b,nc,h,k)
+
+    def carry(sprev, inp):
+        s_c, dec = inp
+        return sprev * dec[..., None] + s_c, sprev
+
+    s_init = (
+        s0.astype(jnp.float32) if s0 is not None else jnp.zeros((b, nh, dk, dv), jnp.float32)
+    )
+    s_fin, s_prevs = lax.scan(
+        carry, s_init, (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)  # (b,nc,h,k,v)
+    y_inter = jnp.einsum("bcthk,bchkv->bcthv", r_dec, s_prevs)
+    y = (y_intra + y_inter).reshape(b, s, nh, dv)
+    return y.astype(r.dtype), s_fin
+
+
+def wkv_reference(r, k, v, lw, u, s0=None):
+    """Naive per-step recurrence (oracle)."""
+    b, s, nh, dk = r.shape
+    dv = v.shape[-1]
+    st = s0.astype(jnp.float32) if s0 is not None else jnp.zeros((b, nh, dk, dv), jnp.float32)
+
+    def step(st, inp):
+        rt, kt, vt, lwt = (x.astype(jnp.float32) for x in inp)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, st) + jnp.einsum(
+            "bhk,hk,bhk,bhv->bhv", rt, u.astype(jnp.float32), kt, vt
+        )
+        st = st * jnp.exp(lwt)[..., None] + jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        return st, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, lw))
+    st, ys = lax.scan(step, st, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), st
+
+
+def _time_mix_inputs(cfg: ArchConfig, p, x, shifted):
+    """Return (r, k, v, g, lw) projections, each (B,S,...)."""
+    nh, hd = _dims(cfg)
+    dt = cfg.cdtype
+    mix = p["mix"].astype(dt)
+    xr = x * mix[0] + shifted * (1 - mix[0])
+    xk = x * mix[1] + shifted * (1 - mix[1])
+    xv = x * mix[2] + shifted * (1 - mix[2])
+    xw = x * mix[3] + shifted * (1 - mix[3])
+    xg = x * mix[4] + shifted * (1 - mix[4])
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(dt))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(dt)).astype(jnp.float32))
+    # data-dependent decay (Finch): w = base + B tanh(A xw); lw = -exp(w)
+    lora = jnp.einsum(
+        "bsr,re->bse",
+        jnp.tanh(jnp.einsum("bsd,dr->bsr", xw.astype(jnp.float32), p["w_lora_a"])),
+        p["w_lora_b"],
+    )
+    lw = -jnp.exp(p["w_base"][None, None, :] + lora)  # (B,S,d) log decay < 0
+    b, s, d = x.shape
+    return (
+        r.reshape(b, s, nh, hd),
+        k.reshape(b, s, nh, hd),
+        v.reshape(b, s, nh, hd),
+        g,
+        lw.reshape(b, s, nh, hd),
+    )
+
+
+def _group_norm(p, y):
+    """Per-head group norm on the WKV output (B,S,H,V) -> (B,S,d)."""
+    yf = y.astype(jnp.float32)
+    mu = yf.mean(-1, keepdims=True)
+    var = ((yf - mu) ** 2).mean(-1, keepdims=True)
+    yf = (yf - mu) * lax.rsqrt(var + 1e-5)
+    b, s = y.shape[:2]
+    return yf.reshape(b, s, -1) * p["ln_x"].astype(jnp.float32)
+
+
+def apply_rwkv_timemix(cfg: ArchConfig, p, x, *, rules=cm.DEFAULT_RULES):
+    shifted = _token_shift(x)
+    r, k, v, g, lw = _time_mix_inputs(cfg, p, x, shifted)
+    y, _ = wkv_chunked(r, k, v, lw, p["u_bonus"], chunk=cfg.ssm_chunk)
+    y = _group_norm(p, y) * g
+    return jnp.einsum("bsd,de->bse", y.astype(cfg.cdtype), p["wo"].astype(cfg.cdtype))
+
+
+def apply_rwkv_channelmix(cfg: ArchConfig, p, x, *, rules=cm.DEFAULT_RULES):
+    dt = cfg.cdtype
+    shifted = _token_shift(x)
+    mix = p["cm_mix"].astype(dt)
+    xk = x * mix[0] + shifted * (1 - mix[0])
+    xr = x * mix[1] + shifted * (1 - mix[1])
+    k = jnp.einsum("bsd,df->bsf", xk, p["cm_k"].astype(dt))
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(dt)
+    k = cm.constrain(k, ("batch", "seq", "ff"), rules)
+    kv = jnp.einsum("bsf,fd->bsd", k, p["cm_v"].astype(dt))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm_r"].astype(dt)).astype(jnp.float32))
+    return (r * kv.astype(jnp.float32)).astype(dt)
+
+
+def rwkv_cache_init(cfg: ArchConfig, batch: int, dtype):
+    nh, hd = _dims(cfg)
+    return {
+        "tm_prev": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "cm_prev": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+    }
+
+
+def apply_rwkv_timemix_decode(cfg: ArchConfig, p, x, cache, *, rules=cm.DEFAULT_RULES):
+    """One-token time-mix; x is the *normed* layer input (B, 1, d)."""
+    r, k, v, g, lw = _time_mix_inputs(cfg, p, x, cache["tm_prev"])
+    y, s_new = wkv_reference(r, k, v, lw, p["u_bonus"], s0=cache["wkv"])
+    y = _group_norm(p, y) * g
+    out = jnp.einsum("bsd,de->bse", y.astype(cfg.cdtype), p["wo"].astype(cfg.cdtype))
+    return out, {**cache, "tm_prev": x, "wkv": s_new}
+
+
+def apply_rwkv_channelmix_decode(cfg: ArchConfig, p, x, cache, *, rules=cm.DEFAULT_RULES):
+    """One-token channel-mix; x is the *normed* sublayer input (B, 1, d)."""
+    dt = cfg.cdtype
+    mix = p["cm_mix"].astype(dt)
+    prev = cache["cm_prev"]
+    xk = x * mix[0] + prev * (1 - mix[0])
+    xr = x * mix[1] + prev * (1 - mix[1])
+    kk = jnp.einsum("bsd,df->bsf", xk, p["cm_k"].astype(dt))
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(dt)
+    kv = jnp.einsum("bsf,fd->bsd", kk, p["cm_v"].astype(dt))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm_r"].astype(dt)).astype(jnp.float32))
+    out = (rr * kv.astype(jnp.float32)).astype(dt)
+    return out, {**cache, "cm_prev": x}

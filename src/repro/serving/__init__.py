@@ -1,0 +1,3 @@
+from repro.serving.engine import ServeConfig, ServeEngine, make_prefill, make_serve_step
+
+__all__ = ["ServeConfig", "ServeEngine", "make_prefill", "make_serve_step"]

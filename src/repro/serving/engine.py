@@ -1,0 +1,137 @@
+"""Batched serving engine: prefill + jit'd decode loop with sampling.
+
+``ServeEngine`` owns jit'd ``prefill`` and ``decode_step`` closures with
+explicit shardings (KV-cache sequence over "model" = flash-decode) and runs
+batched requests: prompts are right-aligned into a fixed prompt window,
+decoded greedily or with temperature sampling until max_new_tokens.
+
+``make_serve_step`` exposes the single-token decode step that the dry-run
+lowers for the ``decode_32k`` / ``long_500k`` cells.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import common as cm
+from repro.models import lm
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0  # 0 = greedy
+    seed: int = 0
+
+
+def _named(mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def make_serve_step(
+    spec: lm.LMSpec,
+    mesh: Mesh,
+    *,
+    batch: int,
+    s_max: int,
+    enc_len: int = 0,
+    rules=None,
+    donate_cache: bool = True,
+):
+    """Returns (jit'd decode_step, cache_shapes, cache_shardings, param_specs).
+
+    decode_step(params, token (B,), cache) -> (logits (B, V), cache)
+    Cache specs are divisibility-sanitized against the mesh; the KV sequence
+    shards over "model" (flash-decode).
+    """
+    rules = rules or (cm.multipod_rules() if "pod" in mesh.axis_names else cm.DEFAULT_RULES)
+    rules = cm.arch_rules(spec.cfg, rules)
+    # decode moves tokens (KBs), never expert weights (GBs/layer):
+    # and keeps ALL weights resident: experts 2-axis (model x data), dense
+    # layers TP over "model" and replicated over "data" (no optimizer states
+    # at inference, so FSDP's per-layer d-gather would be pure overhead).
+    rules = {**rules, "moe_gathered": True, "embed_p": None, "embed_d": None}
+    rules = cm.attach_axis_sizes(rules, mesh)
+    pshape = jax.eval_shape(lambda k: lm.init_params(spec, k), jax.random.PRNGKey(0))
+    pspecs = cm.sanitize_specs(lm.param_specs(spec, rules), pshape, mesh)
+
+    cache_shapes = jax.eval_shape(
+        lambda: lm.init_cache(spec, batch, s_max, enc_len=enc_len)
+    )
+    cspecs = cm.tree_specs(lm.cache_axes(spec), rules)
+    if spec.is_encdec:
+        cspecs = {**cspecs, "enc_out": cm.logical_to_spec(("batch", "seq", "embed"), rules)}
+        cache_shapes = {
+            **cache_shapes,
+            "enc_out": jax.ShapeDtypeStruct((batch, enc_len, spec.cfg.d_model), spec.cfg.cdtype),
+        }
+    cspecs = cm.sanitize_specs(cspecs, cache_shapes, mesh)
+    tok_spec = cm.sanitize_spec(cm.logical_to_spec(("batch",), rules), (batch,), mesh)
+
+    def step(params, token, cache):
+        return lm.decode_step(spec, params, token, cache, rules=rules)
+
+    jit_step = jax.jit(
+        step,
+        in_shardings=(_named(mesh, pspecs), NamedSharding(mesh, tok_spec), _named(mesh, cspecs)),
+        out_shardings=(None, _named(mesh, cspecs)),
+        donate_argnums=(2,) if donate_cache else (),
+    )
+    return jit_step, cache_shapes, _named(mesh, cspecs), pspecs
+
+
+def make_prefill(spec: lm.LMSpec, mesh: Mesh, s_max: int, *, rules=None):
+    rules = rules or (cm.multipod_rules() if "pod" in mesh.axis_names else cm.DEFAULT_RULES)
+    rules = cm.arch_rules(spec.cfg, rules)
+    rules = cm.attach_axis_sizes(rules, mesh)
+    pshape = jax.eval_shape(lambda k: lm.init_params(spec, k), jax.random.PRNGKey(0))
+    pspecs = cm.sanitize_specs(lm.param_specs(spec, rules), pshape, mesh)
+
+    def pf(params, batch):
+        return lm.prefill(spec, params, batch, s_max, rules=rules)
+
+    return jax.jit(pf, in_shardings=(_named(mesh, pspecs), None)), pspecs
+
+
+class ServeEngine:
+    """Simple batched request driver (greedy / temperature sampling)."""
+
+    def __init__(self, spec: lm.LMSpec, mesh: Mesh, params, s_max: int, batch: int = 0,
+                 cfg: ServeConfig = ServeConfig()):
+        self.spec, self.mesh, self.params, self.cfg = spec, mesh, params, cfg
+        self.s_max = s_max
+        self.decode, _, _, _ = make_serve_step(
+            spec, mesh, batch=batch or 1, s_max=s_max, donate_cache=True
+        )
+        self.prefill, _ = make_prefill(spec, mesh, s_max)
+
+    def generate(self, prompts: np.ndarray, frames: np.ndarray | None = None) -> np.ndarray:
+        """prompts (B, S_prompt) int32 -> generated tokens (B, max_new)."""
+        batch = {"tokens": jnp.asarray(prompts)}
+        if frames is not None:
+            batch["frames"] = jnp.asarray(frames)
+        with self.mesh:
+            logits, cache = self.prefill(self.params, batch)
+            key = jax.random.PRNGKey(self.cfg.seed)
+            out = []
+            tok = self._sample(logits, key)
+            for i in range(self.cfg.max_new_tokens):
+                out.append(np.asarray(tok))
+                logits, cache = self.decode(self.params, tok, cache)
+                key, sub = jax.random.split(key)
+                tok = self._sample(logits, sub)
+        return np.stack(out, axis=1)
+
+    def _sample(self, logits, key):
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / self.cfg.temperature, axis=-1).astype(jnp.int32)

@@ -1,0 +1,268 @@
+"""Jit'd train-step builders: grad-accum, clipping, optional cross-pod
+int8 error-feedback gradient compression.
+
+``make_train_step`` returns a function
+    (params, opt_state, batch, [ef_state]) -> (params, opt_state, metrics)
+already wrapped in ``jax.jit`` with in/out shardings derived from the model's
+logical axes, ready for ``.lower(...).compile()`` in the dry-run.
+
+Microbatching: the global batch is split into ``accum`` microbatches scanned
+sequentially; grads are averaged in fp32.  XLA overlaps the FSDP all-gathers
+of layer i+1 with the compute of layer i inside each microbatch (scan over
+layers), which is the compute/comm overlap story for the roofline.
+
+Cross-pod compression (optional, multi-pod mesh only): the backward pass
+computes *pod-local* grads inside a shard_map that is manual over "pod" and
+auto over ("data", "model"); the cross-pod all-reduce then happens on int8
+quantized grads with error-feedback residuals -- 4x less ICI traffic on the
+slowest (cross-pod) links at <1% quality cost (error feedback keeps the
+quantization bias out of the trajectory).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import common as cm
+from repro.models import lm
+from repro.training import optim as opt_mod
+
+
+def _split_microbatches(batch, accum: int):
+    """(B, ...) -> (accum, B/accum, ...) for every array in the batch."""
+    return jax.tree.map(
+        lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]), batch
+    )
+
+
+def make_loss_and_grad(spec: lm.LMSpec, rules, accum: int = 1):
+    def loss_fn(params, batch):
+        loss, metrics = lm.loss_fn(spec, params, batch, rules=rules)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def accum_grads(params, batch):
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+        micro = _split_microbatches(batch, accum)
+
+        def body(carry, mb):
+            loss_acc, grads_acc = carry
+            (loss, metrics), grads = grad_fn(params, mb)
+            grads_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / accum, grads_acc, grads
+            )
+            return (loss_acc + loss / accum, grads_acc), metrics
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), metrics = lax.scan(body, (jnp.zeros(()), zeros), micro)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss, metrics, grads
+
+    return accum_grads
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback compression for the cross-pod gradient sync
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(x: jax.Array):
+    """Symmetric per-tensor int8 quantization; returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_pod_allreduce(grads, ef_state, axis: str = "pod"):
+    """Mean-all-reduce over ``axis`` with int8 + error feedback.
+
+    Must run inside a shard_map manual over ``axis``.  ef_state is the
+    per-pod residual pytree (same shapes as grads, fp32).
+    """
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(g32)
+        deq = dequantize_int8(q, scale)
+        new_e = g32 - deq  # residual stays pod-local
+        synced = lax.pmean(deq, axis)
+        return synced.astype(g.dtype), new_e
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_e = td.flatten_up_to(ef_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return td.unflatten([o[0] for o in out]), td.unflatten([o[1] for o in out])
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    spec: lm.LMSpec,
+    mesh: Mesh,
+    opt_cfg: opt_mod.OptConfig,
+    *,
+    rules=None,
+    accum: int = 1,
+    donate: bool = True,
+):
+    """Returns (jit_step, param_specs, opt_specs, batch_spec).
+
+    Specs are divisibility-sanitized against the mesh (jit in_shardings must
+    divide exactly), and the rules passed to the model carry the mesh axis
+    sizes so activation constraints self-sanitize too.
+    """
+    rules = rules or (cm.multipod_rules() if "pod" in mesh.axis_names else cm.DEFAULT_RULES)
+    rules = cm.arch_rules(spec.cfg, rules)
+    rules = cm.attach_axis_sizes(rules, mesh)
+    pshape = jax.eval_shape(partial(lm.init_params, spec), jax.random.PRNGKey(0))
+    pspecs = cm.sanitize_specs(lm.param_specs(spec, rules), pshape, mesh)
+    opt_init, opt_update = opt_mod.make_optimizer(opt_cfg)
+    accum_grads = make_loss_and_grad(spec, rules, accum)
+    batch_spec = cm.logical_to_spec(("batch", "seq"), rules)
+
+    def step(params, opt_state, batch):
+        loss, metrics, grads = accum_grads(params, batch)
+        grads, gnorm = opt_mod.clip_by_global_norm(grads, opt_cfg.clip_norm)
+        params, opt_state = opt_update(grads, opt_state, params)
+        metrics = {**metrics, "loss": loss, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    # optimizer state specs mirror (sanitized) param specs elementwise;
+    # adafactor factored states drop the last/second-last entry, which keeps
+    # divisibility (same dims as the param prefix).
+    if opt_cfg.name == "adamw":
+        ospecs = opt_mod.adamw_state_specs(pspecs)
+    else:
+        ospecs = opt_mod.adafactor_state_specs(pspecs, pshape)
+
+    jit_step = jax.jit(
+        step,
+        in_shardings=(
+            _named(mesh, pspecs),
+            _named(mesh, ospecs),
+            None,  # batch: caller-placed (batch_spec returned for that)
+        ),
+        out_shardings=(_named(mesh, pspecs), _named(mesh, ospecs), None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return jit_step, pspecs, ospecs, batch_spec
+
+
+def _named(mesh: Mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def make_compressed_train_step(
+    spec: lm.LMSpec,
+    mesh: Mesh,
+    opt_cfg: opt_mod.OptConfig,
+    *,
+    rules=None,
+    accum: int = 1,
+):
+    """Multi-pod train step with int8 error-feedback cross-pod grad sync.
+
+    The whole loss+grad+update runs inside a shard_map that is MANUAL over
+    "pod" and AUTO over ("data","model"): each pod computes grads on its own
+    batch shard (no implicit cross-pod psum -- params are pod-replicated),
+    the sync happens explicitly on int8-quantized grads (4x less traffic on
+    the slowest links), and error-feedback residuals (per-pod state with a
+    leading pod axis) carry the rounding into the next step.
+
+    step(params, opt_state, batch, ef_state) ->
+        (params, opt_state, metrics, ef_state)
+
+    .. warning:: EXPERIMENTAL on the CPU backend: XLA's SPMD partitioner
+       aborts (C++ CHECK, spmd_partitioner_util.cc:504) partitioning gathers
+       inside partial-manual regions -- the same class of issue as XLA's
+       b/433785288, slated for the Shardy partitioner.  The compressed
+       collective itself is validated in full-manual shard_map
+       (tests/test_sharding.py::test_compressed_pod_allreduce).
+    """
+    if "pod" not in mesh.axis_names:
+        raise ValueError("compressed sync needs a 'pod' mesh axis")
+    rules = rules or cm.multipod_rules()
+    rules = cm.arch_rules(spec.cfg, rules)
+    # inside the pod-manual region the pod axis is gone from auto sharding:
+    inner_rules = dict(rules)
+    inner_rules["batch"] = tuple(a for a in rules["batch"] if a != "pod") or ("data",)
+    inner_rules["batch_inner"] = inner_rules["batch"]
+    # XLA SPMD crashes partitioning sharded-operand gathers inside
+    # partial-manual regions (spmd_partitioner_util.cc:504); keep the
+    # embedding table replicated inside this step (documented memory cost).
+    inner_rules["vocab"] = None
+    inner_rules["embed_d"] = None
+    inner_rules = cm.attach_axis_sizes(inner_rules, mesh)
+    pshape = jax.eval_shape(partial(lm.init_params, spec), jax.random.PRNGKey(0))
+    pspecs = cm.sanitize_specs(lm.param_specs(spec, inner_rules), pshape, mesh)
+    opt_init, opt_update = opt_mod.make_optimizer(opt_cfg)
+    accum_grads = make_loss_and_grad(spec, inner_rules, accum)
+    n_pods = mesh.shape["pod"]
+
+    def local(params, opt_state, batch, ef):
+        ef = jax.tree.map(lambda e: e[0], ef)  # strip the pod-shard axis
+        loss, metrics, grads = accum_grads(params, batch)
+        grads, ef = compressed_pod_allreduce(grads, ef, axis="pod")
+        grads, gnorm = opt_mod.clip_by_global_norm(grads, opt_cfg.clip_norm)
+        params, opt_state = opt_update(grads, opt_state, params)
+        loss = lax.pmean(loss, "pod")
+        metrics = jax.tree.map(lambda m: lax.pmean(m, "pod"), metrics)
+        metrics = {**metrics, "loss": loss, "grad_norm": gnorm}
+        ef = jax.tree.map(lambda e: e[None], ef)  # restore the pod axis
+        return params, opt_state, metrics, ef
+
+    ef_spec = jax.tree.map(lambda _: P("pod"), pshape)
+    step = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), P(), P("pod"), ef_spec),
+        out_specs=(P(), P(), P(), ef_spec),
+        axis_names={"pod"},
+        check_vma=False,
+    )
+
+    def ef_init(params):
+        return jax.tree.map(
+            lambda p: jnp.zeros((n_pods,) + p.shape, jnp.float32), params
+        )
+
+    return jax.jit(step, donate_argnums=(0, 1, 3)), ef_init, pspecs
+
+
+def init_state(spec: lm.LMSpec, mesh: Mesh, opt_cfg: opt_mod.OptConfig, seed: int = 0, *, rules=None):
+    """Initialize params + optimizer state directly sharded on the mesh."""
+    rules = rules or (cm.multipod_rules() if "pod" in mesh.axis_names else cm.DEFAULT_RULES)
+    rules = cm.arch_rules(spec.cfg, rules)
+    rules = cm.attach_axis_sizes(rules, mesh)
+    pshape = jax.eval_shape(partial(lm.init_params, spec), jax.random.PRNGKey(0))
+    pspecs = cm.sanitize_specs(lm.param_specs(spec, rules), pshape, mesh)
+    opt_init, _ = opt_mod.make_optimizer(opt_cfg)
+
+    with mesh:
+        params = jax.jit(
+            partial(lm.init_params, spec), out_shardings=_named(mesh, pspecs)
+        )(jax.random.PRNGKey(seed))
+        opt_state = jax.jit(opt_init)(params)
+    return params, opt_state

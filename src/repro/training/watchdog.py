@@ -1,0 +1,68 @@
+"""Straggler watchdog + failure-injection harness for the restart loop.
+
+On a real pod, per-step wall times come from the host; a straggling chip
+(thermal throttle, flaky ICI link) shows up as a step-time spike on every
+host because steps are globally synchronous.  The watchdog keeps an EMA of
+step time and flags steps slower than ``factor`` x EMA; the training driver
+logs offenders and (beyond ``max_flags``) requests a checkpoint-and-remesh
+cycle -- the v5e analogue of cordoning a bad node.
+
+``FailureInjector`` deterministically raises at a chosen step so tests can
+prove the checkpoint/restart path is bit-exact.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class StragglerWatchdog:
+    factor: float = 2.5
+    decay: float = 0.9
+    warmup_steps: int = 3
+    ema: float | None = None
+    flags: list = field(default_factory=list)
+    _seen: int = 0
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Record one step time; returns True if this step is a straggler."""
+        self._seen += 1
+        if self._seen <= self.warmup_steps:
+            # warmup: seed the EMA, never flag (first steps include compile)
+            self.ema = dt if self.ema is None else self.decay * self.ema + (1 - self.decay) * dt
+            return False
+        is_slow = self.ema is not None and dt > self.factor * self.ema
+        if is_slow:
+            self.flags.append((step, dt, self.ema))
+        else:
+            self.ema = self.decay * self.ema + (1 - self.decay) * dt
+        return is_slow
+
+
+class StepTimer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.dt = time.perf_counter() - self.t0
+        return False
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class FailureInjector:
+    """Raises InjectedFailure when training reaches ``fail_at_step`` (once)."""
+
+    fail_at_step: int | None = None
+    fired: bool = False
+
+    def check(self, step: int):
+        if self.fail_at_step is not None and step == self.fail_at_step and not self.fired:
+            self.fired = True
+            raise InjectedFailure(f"injected node failure at step {step}")

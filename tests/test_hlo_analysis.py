@@ -1,0 +1,75 @@
+"""Trip-count-aware HLO analysis: scanned == unrolled programs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as ha
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_scan_equals_unroll_flops():
+    def f_scan(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=10)
+        return h
+
+    def f_unroll(x, w):
+        h = x
+        for _ in range(10):
+            h = jnp.tanh(h @ w)
+        return h
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    rs = ha.analyze(_compile(f_scan, x, w))
+    ru = ha.analyze(_compile(f_unroll, x, w))
+    assert rs["dot_flops"] == ru["dot_flops"] == 20 * 256**3
+
+
+def test_nested_scan_multiplies():
+    def f(x, w):
+        def outer(h, _):
+            def inner(h2, _):
+                return h2 @ w, None
+            h2, _ = jax.lax.scan(inner, h, None, length=3)
+            return h2, None
+        h, _ = jax.lax.scan(outer, x, None, length=5)
+        return h
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    r = ha.analyze(_compile(f, x, w))
+    assert r["dot_flops"] == 15 * 2 * 128**3
+
+
+def test_dot_flops_with_batch_dims():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+
+    a = jax.ShapeDtypeStruct((4, 64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 32, 16), jnp.float32)
+    r = ha.analyze(_compile(f, a, b))
+    assert r["dot_flops"] == 2 * 4 * 64 * 32 * 16
+
+
+def test_cost_analysis_undercounts_loops():
+    """Documents WHY this module exists: XLA counts while bodies once."""
+    def f_scan(x, w):
+        def body(h, _):
+            return h @ w, None
+        h, _ = jax.lax.scan(body, x, None, length=10)
+        return h
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    c = jax.jit(f_scan).lower(x, w).compile()
+    ca = c.cost_analysis()
+    ca = ca if isinstance(ca, dict) else ca[0]
+    assert ca["flops"] == pytest.approx(2 * 128**3, rel=0.01)  # one body!
+    assert ha.analyze(c.as_text())["dot_flops"] == 10 * 2 * 128**3

@@ -1,0 +1,140 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rng as crng
+from repro.models import mamba2 as mb
+from repro.models import rwkv6 as rk
+from repro.training.train_step import dequantize_int8, quantize_int8
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# counter RNG invariants
+# ---------------------------------------------------------------------------
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    i=st.integers(0, 10_000),
+    j=st.integers(0, 10_000),
+    c=st.integers(0, 64),
+)
+@settings(**_SETTINGS)
+def test_edge_rademacher_antisymmetric(seed, i, j, c):
+    qij = float(np.asarray(crng.edge_rademacher(seed, i, j, c)))
+    qji = float(np.asarray(crng.edge_rademacher(seed, j, i, c)))
+    if i == j:
+        assert qij == 0.0
+    else:
+        assert qij in (-1.0, 1.0)
+        assert qij == -qji
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**_SETTINGS)
+def test_edge_rademacher_unbiased(seed):
+    rows = jnp.arange(64)[:, None]
+    cols = jnp.arange(64)[None, :]
+    q = np.asarray(crng.edge_rademacher(seed, rows, cols, 0))
+    off = q[~np.eye(64, dtype=bool)]
+    assert abs(off.mean()) < 0.2  # ~N(0, 1/sqrt(4032))
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    parts=st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=4),
+)
+@settings(**_SETTINGS)
+def test_hash_u32_deterministic(seed, parts):
+    a = np.asarray(crng.hash_u32(np.uint32(seed), *[np.uint32(p) for p in parts]))
+    b = np.asarray(crng.hash_u32(np.uint32(seed), *[np.uint32(p) for p in parts]))
+    assert np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback quantization
+# ---------------------------------------------------------------------------
+
+
+@given(
+    scale=st.floats(1e-6, 1e4),
+    n=st.integers(4, 256),
+    seed=st.integers(0, 1000),
+)
+@settings(**_SETTINGS)
+def test_int8_quant_bounded_error(scale, n, seed):
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(n,)).astype(np.float32) * scale)
+    q, s = quantize_int8(x)
+    deq = dequantize_int8(q, s)
+    # max error bounded by half a quantization step
+    assert float(jnp.max(jnp.abs(deq - x))) <= float(s) * 0.5 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# chunked recurrences == naive scans for arbitrary chunk splits
+# ---------------------------------------------------------------------------
+
+
+@given(
+    s=st.sampled_from([16, 32, 48, 64]),
+    chunk=st.sampled_from([4, 8, 16, 64]),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=10, deadline=None)
+def test_ssd_chunk_invariance(s, chunk, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    B, H, P, N = 2, 2, 4, 8
+    x = jax.random.normal(ks[0], (B, s, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, s, H)))
+    a_log = jnp.log(jnp.linspace(1.0, 4.0, H))
+    bm = jax.random.normal(ks[2], (B, s, N))
+    cm = jax.random.normal(ks[3], (B, s, N))
+    d = jnp.ones((H,))
+    y1, h1 = mb.ssd_chunked(x, dt, a_log, bm, cm, d, chunk=chunk)
+    y2, h2 = mb.ssd_reference(x, dt, a_log, bm, cm, d)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=1e-3, atol=1e-3)
+
+
+@given(
+    s=st.sampled_from([16, 32, 64]),
+    chunk=st.sampled_from([4, 8, 32]),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=10, deadline=None)
+def test_wkv_chunk_invariance(s, chunk, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    B, H, K, V = 2, 2, 4, 4
+    r = jax.random.normal(ks[0], (B, s, H, K))
+    k = jax.random.normal(ks[1], (B, s, H, K))
+    v = jax.random.normal(ks[2], (B, s, H, V))
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, s, H, K)) * 0.5 - 1.0)
+    u = 0.1 * jax.random.normal(ks[4], (H, K))
+    y1, s1 = rk.wkv_chunked(r, k, v, lw, u, chunk=chunk)
+    y2, s2 = rk.wkv_reference(r, k, v, lw, u)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline determinism / shard-independence
+# ---------------------------------------------------------------------------
+
+
+@given(step=st.integers(0, 1000), seed=st.integers(0, 1000))
+@settings(**_SETTINGS)
+def test_data_restart_exact(step, seed):
+    from repro.data import DataConfig, host_batch
+
+    cfg = DataConfig(vocab=512, seq_len=16, global_batch=4, seed=seed)
+    b1 = host_batch(cfg, step)
+    b2 = host_batch(cfg, step)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert (b1["tokens"] >= 0).all() and (b1["tokens"] < 512).all()
+    # labels are the shifted tokens
+    assert np.array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
