@@ -4,6 +4,7 @@
   bench_scaling    -- Fig 3a/3b: runtime vs n, runtime vs workers (derived)
   bench_blocksize  -- Fig 3c: runtime vs block (tile) size
   bench_matmul     -- section 3.2 / Fig 1: shuffle-free vs naive collective bytes
+  bench_sequence   -- sequence engine: chain-operator reuse vs pairwise rebuilds
   roofline         -- per (arch x shape x mesh) roofline terms from the dry-run
 
 Prints ``name,metric,value`` CSV lines.  ``python -m benchmarks.run [--fast]``
@@ -22,13 +23,21 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="comma-separated bench names")
     args = ap.parse_args()
 
-    from benchmarks import bench_accuracy, bench_blocksize, bench_matmul, bench_scaling, roofline
+    from benchmarks import (
+        bench_accuracy,
+        bench_blocksize,
+        bench_matmul,
+        bench_scaling,
+        bench_sequence,
+        roofline,
+    )
 
     benches = {
         "accuracy": lambda: bench_accuracy.run(n=256 if args.fast else 512),
         "scaling": lambda: bench_scaling.run(sizes=(96, 128, 192) if args.fast else (128, 256, 512)),
         "blocksize": lambda: bench_blocksize.run(n=256 if args.fast else 512),
         "matmul": lambda: bench_matmul.run(n=512 if args.fast else 1024),
+        "sequence": lambda: bench_sequence.run(n=128 if args.fast else 256, t_steps=4),
         "roofline": lambda: roofline.run(),
     }
     chosen = args.only.split(",") if args.only else list(benches)

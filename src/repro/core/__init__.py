@@ -4,7 +4,12 @@ Public API re-exports.
 """
 
 from repro.core.cad import CADResult, detect_anomalies, node_anomaly_scores, top_anomalies
-from repro.core.chain import ChainOperator, chain_product
+from repro.core.chain import (
+    ChainOperator,
+    chain_build_count,
+    chain_product,
+    reset_chain_build_count,
+)
 from repro.core.distmatrix import (
     SCHEDULES,
     DistContext,
@@ -22,7 +27,9 @@ from repro.core.embedding import (
     edge_projection,
     exact_commute_distances,
 )
+from repro.core.sequence import SequenceDetector, SequenceResult, detect_sequence_anomalies
 from repro.core.solver import estimate_solution, residual_norm
+from repro.core.tiles import Tile, tile_map
 
 __all__ = [
     "CADResult",
@@ -31,11 +38,16 @@ __all__ = [
     "DistContext",
     "Embedding",
     "SCHEDULES",
+    "SequenceDetector",
+    "SequenceResult",
+    "Tile",
     "build_from_nodes",
+    "chain_build_count",
     "chain_product",
     "commute_distance_block",
     "commute_time_embedding",
     "detect_anomalies",
+    "detect_sequence_anomalies",
     "edge_projection",
     "estimate_solution",
     "exact_commute_distances",
@@ -43,7 +55,9 @@ __all__ = [
     "matmul",
     "matmul_rowblock",
     "node_anomaly_scores",
+    "reset_chain_build_count",
     "residual_norm",
+    "tile_map",
     "top_anomalies",
     "trivial_context",
 ]

@@ -22,6 +22,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.distmatrix import DistContext
 from repro.core.embedding import CommuteConfig, Embedding, commute_time_embedding
+from repro.core.tiles import tile_map
 
 
 def node_anomaly_scores(
@@ -30,21 +31,27 @@ def node_anomaly_scores(
     a2: jax.Array,
     e1: Embedding,
     e2: Embedding,
+    *,
+    use_kernel: bool = False,
 ) -> jax.Array:
-    """F (n,) row-sharded; fused blockwise Alg. 4 lines 3-6."""
-    n = a1.shape[0]
-    R, C = ctx.n_row_shards, ctx.n_col_shards
-    pr, pc = n // R, n // C
+    """F (n,) row-sharded; fused blockwise Alg. 4 lines 3-6.
 
-    def local(b1, b2, z1, z2, v1, v2):
-        r = lax.axis_index(ctx.row_axes)
-        c = lax.axis_index(ctx.col_axes)
-        rows = r * pr + jnp.arange(pr)
-        cols = c * pc + jnp.arange(pc)
+    ``use_kernel=True`` swaps the tile body for the fused Pallas scorer
+    (:func:`repro.kernels.cad_score.cad_scores_tile`) -- the tile program owns
+    distribution, the kernel owns the on-chip schedule.
+    """
+
+    def tile_fn(tile, b1, b2, z1, z2, v1, v2):
+        if use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.cad_scores_tile(
+                b1, b2, z1[tile.rows], z1[tile.cols], z2[tile.rows], z2[tile.cols], v1, v2
+            )
 
         def dist(z, vol):
-            zi = z[rows].astype(jnp.float32)
-            zj = z[cols].astype(jnp.float32)
+            zi = z[tile.rows].astype(jnp.float32)
+            zj = z[tile.cols].astype(jnp.float32)
             sq_i = jnp.sum(zi * zi, -1)
             sq_j = jnp.sum(zj * zj, -1)
             return vol * (sq_i[:, None] + sq_j[None, :] - 2.0 * (zi @ zj.T))
@@ -52,11 +59,20 @@ def node_anomaly_scores(
         de = jnp.abs(b1.astype(jnp.float32) - b2.astype(jnp.float32)) * jnp.abs(
             dist(z1, v1) - dist(z2, v2)
         )
-        return lax.psum(de.sum(axis=1), ctx.col_axes)
+        return de.sum(axis=1)
 
-    fn = jax.shard_map(
-        local,
-        mesh=ctx.mesh,
+    # Z is (n, k_RP) -- small; replicate it for tile-local access to rows+cols.
+    z1 = ctx.constrain(e1.z, P(None, None))
+    z2 = ctx.constrain(e2.z, P(None, None))
+    return tile_map(
+        ctx,
+        tile_fn,
+        a1,
+        a2,
+        z1,
+        z2,
+        e1.vol,
+        e2.vol,
         in_specs=(
             ctx.matrix_spec,
             ctx.matrix_spec,
@@ -65,12 +81,8 @@ def node_anomaly_scores(
             P(),
             P(),
         ),
-        out_specs=ctx.vector_spec,
+        reduce="cols",
     )
-    # Z is (n, k_RP) -- small; replicate it for tile-local access to rows+cols.
-    z1 = ctx.constrain(e1.z, P(None, None))
-    z2 = ctx.constrain(e2.z, P(None, None))
-    return fn(a1, a2, z1, z2, e1.vol, e2.vol)
 
 
 def top_anomalies(scores: jax.Array, k: int):
@@ -98,6 +110,6 @@ def detect_anomalies(
     cfg = cfg or CommuteConfig()
     e1 = commute_time_embedding(ctx, a1, cfg, use_kernel=use_kernel)
     e2 = commute_time_embedding(ctx, a2, cfg, use_kernel=use_kernel)
-    scores = node_anomaly_scores(ctx, a1, a2, e1, e2)
+    scores = node_anomaly_scores(ctx, a1, a2, e1, e2, use_kernel=use_kernel)
     idx, vals = top_anomalies(scores, top_k)
     return CADResult(scores=scores, top_idx=idx, top_val=vals)

@@ -26,6 +26,20 @@ import jax.numpy as jnp
 from repro.core import laplacian as lap
 from repro.core.distmatrix import DistContext, add_scaled_identity, blockwise_unary, matmul
 
+# Build counter: chain_product is the O(n^3) hot spot, so the sequence engine
+# (and its tests) track exactly how many times it runs.
+_BUILD_COUNT = 0
+
+
+def chain_build_count() -> int:
+    """Number of chain operators built since process start (or last reset)."""
+    return _BUILD_COUNT
+
+
+def reset_chain_build_count() -> None:
+    global _BUILD_COUNT
+    _BUILD_COUNT = 0
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclass
@@ -58,6 +72,8 @@ def chain_product(
 ) -> ChainOperator:
     if d_len < 1:
         raise ValueError("chain length d must be >= 1")
+    global _BUILD_COUNT
+    _BUILD_COUNT += 1
     mm = partial(matmul, ctx, schedule=schedule, out_dtype=dtype, use_kernel=use_kernel)
 
     deg = lap.degrees(ctx, a)

@@ -30,9 +30,7 @@ All schedules accumulate in fp32 (MXU-faithful) regardless of storage dtype.
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
-from functools import partial
+from dataclasses import dataclass
 from typing import Callable, Sequence
 
 import jax
@@ -40,6 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.tiles import pcast_varying, shard_map, tile_map
 
 SCHEDULES = ("xla", "summa", "cannon")
 
@@ -131,7 +131,7 @@ def _matmul_summa(ctx: DistContext, a, b, out_dtype, use_kernel=False):
         b_panel = lax.all_gather(b_blk, row_ax, axis=0, tiled=True)
         return _local_dot(a_panel, b_panel, use_kernel).astype(out_dtype)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=ctx.mesh,
         in_specs=(ctx.matrix_spec, ctx.matrix_spec),
@@ -164,9 +164,7 @@ def _matmul_cannon(ctx: DistContext, a, b, out_dtype, use_kernel=False):
         b_blk = lax.ppermute(b_blk, axes, skew_b)
         # pcast-to-varying: the accumulator must carry the same
         # (data, model)-varying type as the per-step GEMM output.
-        acc0 = lax.pcast(
-            jnp.zeros((a_blk.shape[0], b_blk.shape[1]), jnp.float32), axes, to="varying"
-        )
+        acc0 = pcast_varying(jnp.zeros((a_blk.shape[0], b_blk.shape[1]), jnp.float32), axes)
 
         def body(_, carry):
             acc, a_cur, b_cur = carry
@@ -180,7 +178,7 @@ def _matmul_cannon(ctx: DistContext, a, b, out_dtype, use_kernel=False):
         acc, _, _ = lax.fori_loop(0, R, body, (acc0, a_blk, b_blk))
         return acc.astype(out_dtype)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=ctx.mesh,
         in_specs=(ctx.matrix_spec, ctx.matrix_spec),
@@ -242,22 +240,14 @@ def build_from_nodes(
     R, C = ctx.n_row_shards, ctx.n_col_shards
     if n % R or n % C:
         raise ValueError(f"n={n} must divide the {R}x{C} shard grid")
-    pr, pc = n // R, n // C
 
-    def local(f):
-        r = lax.axis_index(ctx.row_axes)
-        c = lax.axis_index(ctx.col_axes)
-        rows = r * pr + jnp.arange(pr)
-        cols = c * pc + jnp.arange(pc)
-        blk = kernel_fn(f[rows], f[cols]).astype(dtype)
+    def tile_fn(tile, f):
+        blk = kernel_fn(f[tile.rows], f[tile.cols]).astype(dtype)
         if zero_diagonal:
-            blk = jnp.where(rows[:, None] == cols[None, :], jnp.zeros((), dtype), blk)
+            blk = jnp.where(tile.diag_mask(), jnp.zeros((), dtype), blk)
         return blk
 
-    fn = jax.shard_map(
-        local, mesh=ctx.mesh, in_specs=P(None, None), out_specs=ctx.matrix_spec
-    )
-    return fn(feats)
+    return tile_map(ctx, tile_fn, feats, grid=(n, n), in_specs=(P(None, None),))
 
 
 def blockwise_unary(
@@ -268,22 +258,13 @@ def blockwise_unary(
     out_dtype=None,
 ) -> jax.Array:
     """Apply ``fn(block, global_rows, global_cols) -> block`` tile-locally."""
-    n0, n1 = x.shape
-    R, C = ctx.n_row_shards, ctx.n_col_shards
-    pr, pc = n0 // R, n1 // C
     out_dtype = out_dtype or x.dtype
-
-    def local(blk):
-        r = lax.axis_index(ctx.row_axes)
-        c = lax.axis_index(ctx.col_axes)
-        rows = r * pr + jnp.arange(pr)
-        cols = c * pc + jnp.arange(pc)
-        return fn(blk, rows, cols).astype(out_dtype)
-
-    f = jax.shard_map(
-        local, mesh=ctx.mesh, in_specs=ctx.matrix_spec, out_specs=ctx.matrix_spec
+    return tile_map(
+        ctx,
+        lambda tile, blk: fn(blk, tile.rows, tile.cols),
+        x,
+        out_dtype=out_dtype,
     )
-    return f(x)
 
 
 def add_scaled_identity(ctx: DistContext, x: jax.Array, scale=1.0) -> jax.Array:

@@ -13,7 +13,8 @@ hashes.  One pass over A per batch of k_RP columns, zero stored randomness.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import math
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +25,7 @@ from repro.core import rng as crng
 from repro.core.chain import ChainOperator, chain_product
 from repro.core.distmatrix import DistContext
 from repro.core.solver import estimate_solution
+from repro.core.tiles import tile_map
 
 
 @dataclass(frozen=True)
@@ -43,8 +45,6 @@ class CommuteConfig:
     def k_rp(self, n: int) -> int:
         if self.k_override is not None:
             return int(self.k_override)
-        import math
-
         return max(1, math.ceil(math.log(n / self.eps_rp)))
 
 
@@ -54,32 +54,21 @@ def edge_projection(ctx: DistContext, a: jax.Array, seed: int, k: int) -> jax.Ar
     Y[i, c] = sum_j sqrt(A[i, j]) * Q_c[i, j] with Q_c antisymmetric +/-1.
     Entries scaled 1/sqrt(k) (Johnson-Lindenstrauss normalization).
     """
-    n = a.shape[0]
-    R, C = ctx.n_row_shards, ctx.n_col_shards
-    pr, pc = n // R, n // C
 
-    def local(blk):
-        r = lax.axis_index(ctx.row_axes)
-        c = lax.axis_index(ctx.col_axes)
-        rows = r * pr + jnp.arange(pr)
-        cols = c * pc + jnp.arange(pc)
+    def tile_fn(tile, blk):
         s = jnp.sqrt(jnp.maximum(blk.astype(jnp.float32), 0.0))
 
         def col(cc, acc):
-            q = crng.edge_rademacher(seed, rows[:, None], cols[None, :], cc)
+            q = crng.edge_rademacher(seed, tile.rows[:, None], tile.cols[None, :], cc)
             return acc.at[:, cc].set(jnp.sum(s * q, axis=1))
 
-        # pcast-to-varying: carry must match the body output's varying type.
-        acc0 = lax.pcast(
-            jnp.zeros((pr, k), jnp.float32), ctx.row_axes + ctx.col_axes, to="varying"
-        )
-        y = lax.fori_loop(0, k, col, acc0)
-        return lax.psum(y, ctx.col_axes)
+        # tile.varying: carry must match the body output's varying type.
+        pr = tile.block_shape[0]
+        acc0 = tile.varying(jnp.zeros((pr, k), jnp.float32))
+        return lax.fori_loop(0, k, col, acc0)
 
-    fn = jax.shard_map(
-        local, mesh=ctx.mesh, in_specs=ctx.matrix_spec, out_specs=P(ctx.row_axes, None)
-    )
-    return fn(a) * (1.0 / jnp.sqrt(jnp.float32(k)))
+    y = tile_map(ctx, tile_fn, a, reduce="cols", out_spec=P(ctx.row_axes, None))
+    return y * (1.0 / jnp.sqrt(jnp.float32(k)))
 
 
 @dataclass

@@ -10,22 +10,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import PartitionSpec as P
 
 from repro.core.distmatrix import DistContext, blockwise_unary
+from repro.core.tiles import tile_map
 
 
 def degrees(ctx: DistContext, a: jax.Array) -> jax.Array:
     """d = A @ 1 as a replicated-column, row-sharded (n,) vector."""
-
-    def local(blk):
-        d = blk.astype(jnp.float32).sum(axis=1)
-        return lax.psum(d, ctx.col_axes)
-
-    fn = jax.shard_map(
-        local, mesh=ctx.mesh, in_specs=ctx.matrix_spec, out_specs=ctx.vector_spec
+    return tile_map(
+        ctx, lambda tile, blk: blk.astype(jnp.float32).sum(axis=1), a, reduce="cols"
     )
-    return fn(a)
 
 
 def volume(ctx: DistContext, deg: jax.Array) -> jax.Array:

@@ -1,0 +1,171 @@
+"""Sequence engine: amortized CADDeLaG over a stream of T graph snapshots.
+
+The paper's headline object is a *sequence* of dense snapshots (climate
+months, election cycles).  Scoring every transition with
+:func:`repro.core.cad.detect_anomalies` rebuilds the O(n^3)-GEMM chain
+operator for both endpoints -- 2(T-1) builds where T suffice.
+:class:`SequenceDetector` computes each snapshot's ``ChainOperator`` /
+``Embedding`` exactly once and carries it forward: snapshot t's embedding is
+reused as the left endpoint of transition (t, t+1).
+
+Memory follows the paper's "never load the whole sequence" design: only two
+snapshots (adjacency + embedding) are resident at any time.  With
+``donate=True`` the detector eagerly deletes the outgoing snapshot's device
+buffers after its last use (double buffering) -- callers must not touch a
+donated snapshot again.
+
+A streaming global top-k across all transitions is maintained on device:
+after each transition the per-transition top-k is merged into the running
+global top-k with one ``lax.top_k`` over 2k candidates.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import chain
+from repro.core.cad import CADResult, node_anomaly_scores, top_anomalies
+from repro.core.distmatrix import DistContext
+from repro.core.embedding import CommuteConfig, Embedding, commute_time_embedding
+
+
+@dataclass
+class SequenceResult:
+    """Per-transition results plus the sequence-wide top-k."""
+
+    transitions: list[CADResult]  # transitions[t] scores snapshot t -> t+1
+    global_top_idx: jax.Array  # (k,) node ids
+    global_top_val: jax.Array  # (k,) scores
+    global_top_step: jax.Array  # (k,) transition index of each entry
+    n_snapshots: int
+    chain_builds: int  # chain_product invocations during run()
+    transition_seconds: list[float] = field(default_factory=list)
+
+
+class SequenceDetector:
+    """Streaming CADDeLaG over T snapshots with one chain build per snapshot.
+
+    Usage::
+
+        det = SequenceDetector(ctx, cfg, top_k=20)
+        for a_t in snapshots:          # iterator; never holds the sequence
+            res = det.push(a_t)        # CADResult for (t-1, t), None at t=0
+        final = det.finalize()
+
+    or simply ``det.run(snapshots)``.
+    """
+
+    def __init__(
+        self,
+        ctx: DistContext,
+        cfg: CommuteConfig | None = None,
+        *,
+        top_k: int = 10,
+        use_kernel: bool = False,
+        donate: bool = False,
+    ):
+        self.ctx = ctx
+        self.cfg = cfg or CommuteConfig()
+        self.top_k = top_k
+        self.use_kernel = use_kernel
+        self.donate = donate
+        self._prev: tuple[jax.Array, Embedding] | None = None
+        self._t = 0  # snapshots consumed
+        self._transitions: list[CADResult] = []
+        self._seconds: list[float] = []
+        self._builds0 = chain.chain_build_count()
+        self._g_val: jax.Array | None = None
+        self._g_idx: jax.Array | None = None
+        self._g_step: jax.Array | None = None
+
+    # -- streaming global top-k ---------------------------------------------
+
+    def _merge_topk(self, idx: jax.Array, val: jax.Array, step: int) -> None:
+        step_arr = jnp.full_like(idx, step)
+        if self._g_val is None:
+            self._g_val, self._g_idx, self._g_step = val, idx, step_arr
+            return
+        cand_val = jnp.concatenate([self._g_val, val])
+        cand_idx = jnp.concatenate([self._g_idx, idx])
+        cand_step = jnp.concatenate([self._g_step, step_arr])
+        top_val, pos = lax.top_k(cand_val, self.top_k)
+        self._g_val = top_val
+        self._g_idx = cand_idx[pos]
+        self._g_step = cand_step[pos]
+
+    # -- snapshot lifecycle --------------------------------------------------
+
+    def _release(self, a: jax.Array, emb: Embedding) -> None:
+        """Drop (and with donate=True, eagerly free) an outgoing snapshot."""
+        if not self.donate:
+            return
+        for buf in (a, emb.z, *(() if emb.op is None else (emb.op.p1, emb.op.p2))):
+            try:
+                buf.delete()
+            except Exception:  # already deleted / not deletable (tracers)
+                pass
+
+    def push(self, a: jax.Array) -> CADResult | None:
+        """Consume snapshot t; returns the CADResult for transition (t-1, t).
+
+        Builds exactly one chain operator (for ``a``); the left endpoint's
+        operator was built when *it* was pushed.
+        """
+        t0 = time.perf_counter()
+        emb = commute_time_embedding(self.ctx, a, self.cfg, use_kernel=self.use_kernel)
+        out = None
+        if self._prev is not None:
+            a_prev, e_prev = self._prev
+            scores = node_anomaly_scores(
+                self.ctx, a_prev, a, e_prev, emb, use_kernel=self.use_kernel
+            )
+            idx, vals = top_anomalies(scores, self.top_k)
+            out = CADResult(scores=scores, top_idx=idx, top_val=vals)
+            jax.block_until_ready(out.scores)
+            self._merge_topk(idx, vals, self._t - 1)
+            self._transitions.append(out)
+            self._seconds.append(time.perf_counter() - t0)
+            self._release(a_prev, e_prev)
+        self._prev = (a, emb)
+        self._t += 1
+        return out
+
+    def finalize(self) -> SequenceResult:
+        """Package per-transition results and the sequence-wide top-k."""
+        if not self._transitions:
+            raise ValueError("finalize() before any transition was scored")
+        return SequenceResult(
+            transitions=self._transitions,
+            global_top_idx=self._g_idx,
+            global_top_val=self._g_val,
+            global_top_step=self._g_step,
+            n_snapshots=self._t,
+            chain_builds=chain.chain_build_count() - self._builds0,
+            transition_seconds=self._seconds,
+        )
+
+    def run(self, snapshots: Iterable[jax.Array]) -> SequenceResult:
+        """Consume an iterator of T snapshots, score all T-1 transitions."""
+        for a in snapshots:
+            self.push(a)
+        return self.finalize()
+
+
+def detect_sequence_anomalies(
+    ctx: DistContext,
+    snapshots: Iterable[jax.Array],
+    cfg: CommuteConfig | None = None,
+    *,
+    top_k: int = 10,
+    use_kernel: bool = False,
+    donate: bool = False,
+) -> SequenceResult:
+    """One-shot convenience wrapper around :class:`SequenceDetector`."""
+    det = SequenceDetector(ctx, cfg, top_k=top_k, use_kernel=use_kernel, donate=donate)
+    return det.run(snapshots)

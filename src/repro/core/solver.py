@@ -28,10 +28,12 @@ def deflate_constant(ctx: DistContext, y: jax.Array) -> jax.Array:
 
     Solutions of L z = y are defined up to a constant shift, which cancels in
     commute distances; removing it keeps bf16/fp32 iterates from drifting.
+    The result is constrained to the row-sharded layout so the mean-subtract
+    (an all-reduce over rows) can't silently regather the operand.
     """
-    n = y.shape[0]
     mean = jnp.mean(y.astype(jnp.float32), axis=0, keepdims=True)
-    return (y.astype(jnp.float32) - mean).astype(y.dtype)
+    out = (y.astype(jnp.float32) - mean).astype(y.dtype)
+    return ctx.constrain(out, ctx.rowblock_spec)
 
 
 def estimate_solution(

@@ -1,0 +1,210 @@
+"""Unified tile-program layer: every blockwise computation in the core.
+
+The paper's Spark job graph is a pile of near-identical map stages: "for the
+(r, c) block of the n x n matrix, recover the global row/column ids, compute
+something tile-local, optionally reduce across the block row".  The JAX port
+accumulated five hand-rolled copies of that shard_map pattern; this module
+owns it once.
+
+``tile_map(ctx, fn, *operands)`` runs ``fn(tile, *local_blocks)`` on every
+device with a :class:`Tile` describing the device's (rows, cols) window of the
+global grid, and stitches the local outputs back into one sharded array.
+An optional ``reduce="cols"`` psums the per-tile result across the column
+axis (the Map+ReduceByKey of the paper).  Tile bodies are ordinary traced JAX,
+so they can drop into a Pallas kernel for the inner loop (see
+``node_anomaly_scores``) -- the tile program handles distribution, the kernel
+handles the single-chip schedule.
+
+This module also owns the version-compat shims for the manual-sharding API
+(``jax.shard_map`` vs ``jax.experimental.shard_map``; ``lax.pcast`` /
+``lax.pvary`` vs nothing) so the rest of the core is version-agnostic.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# version compat: manual-sharding API surface
+# ---------------------------------------------------------------------------
+
+try:  # jax >= 0.5: top-level export with varying-type checking built in
+    _shard_map = jax.shard_map
+    _COMPAT_KWARGS: dict[str, Any] = {}
+except AttributeError:  # jax 0.4.x: experimental module; disable rep checking
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _COMPAT_KWARGS = {"check_rep": False}
+
+import inspect as _inspect
+
+_SHARD_MAP_PARAMS = frozenset(_inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None, check=None):
+    """``jax.shard_map`` across jax versions (old versions skip rep checks).
+
+    ``axis_names`` restricts manual sharding to those mesh axes (mapped to the
+    old API's complementary ``auto=`` set); ``check=False`` disables varying-
+    type checking where the installed jax supports toggling it.
+    """
+    kw = dict(_COMPAT_KWARGS)
+    if check is not None:
+        if "check_vma" in _SHARD_MAP_PARAMS:
+            kw["check_vma"] = check
+        elif "check_rep" in _SHARD_MAP_PARAMS:
+            kw["check_rep"] = check
+    if axis_names is not None:
+        if "axis_names" in _SHARD_MAP_PARAMS:
+            kw["axis_names"] = set(axis_names)
+        elif "auto" in _SHARD_MAP_PARAMS:
+            kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+if hasattr(lax, "pcast"):
+
+    def pcast_varying(x: jax.Array, axes: Sequence[str]) -> jax.Array:
+        """Mark ``x`` as device-varying over ``axes`` (loop-carry seeding)."""
+        return lax.pcast(x, tuple(axes), to="varying")
+
+elif hasattr(lax, "pvary"):
+
+    def pcast_varying(x: jax.Array, axes: Sequence[str]) -> jax.Array:
+        return lax.pvary(x, tuple(axes))
+
+else:  # old jax with check_rep=False: varying types are not tracked at all
+
+    def pcast_varying(x: jax.Array, axes: Sequence[str]) -> jax.Array:
+        return x
+
+
+# ---------------------------------------------------------------------------
+# the tile-program primitive
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Tile:
+    """One device's window of the global block grid, visible to tile bodies."""
+
+    rows: jax.Array  # (pr,) global row ids of this tile
+    cols: jax.Array  # (pc,) global col ids
+    row_index: jax.Array  # scalar shard index along the row axes
+    col_index: jax.Array  # scalar shard index along the col axes
+    block_shape: tuple[int, int]  # static (pr, pc)
+    mesh_axes: tuple[str, ...]  # all manual axes, for loop-carry casts
+
+    def varying(self, x: jax.Array) -> jax.Array:
+        """Seed a loop carry with the tile-varying type (no-op on old jax)."""
+        return pcast_varying(x, self.mesh_axes)
+
+    def diag_mask(self) -> jax.Array:
+        """(pr, pc) bool mask of global-diagonal entries in this tile."""
+        return self.rows[:, None] == self.cols[None, :]
+
+
+def _axes_index(ctx, axes: Sequence[str]) -> jax.Array:
+    """Flattened shard index over possibly-multiple mesh axes.
+
+    Folded manually (row-major over ``axes``) instead of
+    ``lax.axis_index(tuple)`` so it works on every jax version.
+    """
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * ctx.mesh.shape[a] + lax.axis_index(a)
+    return idx
+
+
+def tile_map(
+    ctx,
+    fn: Callable[..., jax.Array],
+    *operands: jax.Array,
+    grid: tuple[int, int] | None = None,
+    in_specs: Sequence[P] | None = None,
+    out_spec: P | None = None,
+    reduce: str | None = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Run ``fn(tile, *local_blocks)`` over the ctx mesh, one tile per device.
+
+    Args:
+      ctx: ``DistContext`` (mesh + row/col axis names).
+      fn: tile body; receives a :class:`Tile` plus each operand's local block
+        (operands with a replicated spec arrive whole).  Returns the local
+        output block.  The body is ordinary traced JAX and may call Pallas
+        kernels on its block.
+      operands: global arrays.
+      grid: global (n_rows, n_cols) of the logical block grid.  Defaults to
+        the shape of the first matrix-sharded operand.
+      in_specs: one PartitionSpec per operand.  Defaults to
+        ``ctx.matrix_spec`` for every operand (pass ``P(None, None)`` / ``P()``
+        explicitly for replicated tables and scalars).
+      out_spec: sharding of the stitched output.  Defaults to
+        ``ctx.matrix_spec``; with ``reduce="cols"`` defaults to
+        ``ctx.vector_spec`` (pass ``P(row_axes, None)`` for (pr, k) tiles).
+      reduce: ``None`` or ``"cols"``/``"rows"`` -- psum the tile output over
+        that mesh axis before stitching (the blockwise Map+ReduceByKey).
+      out_dtype: optional cast of the tile output.
+    """
+    if in_specs is None:
+        in_specs = tuple(ctx.matrix_spec for _ in operands)
+    in_specs = tuple(in_specs)
+    if len(in_specs) != len(operands):
+        raise ValueError(f"{len(operands)} operands but {len(in_specs)} in_specs")
+
+    if grid is None:
+        for op, spec in zip(operands, in_specs):
+            if spec == ctx.matrix_spec:
+                grid = (op.shape[0], op.shape[1])
+                break
+        if grid is None:
+            raise ValueError("grid= is required when no operand is matrix-sharded")
+    n0, n1 = grid
+    R, C = ctx.n_row_shards, ctx.n_col_shards
+    if n0 % R or n1 % C:
+        raise ValueError(f"grid {grid} must divide the {R}x{C} shard grid")
+    pr, pc = n0 // R, n1 // C
+
+    if reduce not in (None, "cols", "rows"):
+        raise ValueError(f"reduce must be None, 'cols' or 'rows', got {reduce!r}")
+    reduce_axes = {"cols": ctx.col_axes, "rows": ctx.row_axes, None: None}[reduce]
+
+    mesh_axes = tuple(ctx.row_axes) + tuple(ctx.col_axes)
+
+    def local(*blocks):
+        r = _axes_index(ctx, ctx.row_axes)
+        c = _axes_index(ctx, ctx.col_axes)
+        tile = Tile(
+            rows=r * pr + jnp.arange(pr),
+            cols=c * pc + jnp.arange(pc),
+            row_index=r,
+            col_index=c,
+            block_shape=(pr, pc),
+            mesh_axes=mesh_axes,
+        )
+        out = fn(tile, *blocks)
+        if reduce_axes is not None:
+            out = lax.psum(out, reduce_axes)
+        if out_dtype is not None:
+            out = out.astype(out_dtype)
+        return out
+
+    if out_spec is None:
+        if reduce == "cols":
+            out_spec = ctx.vector_spec
+        elif reduce == "rows":
+            out_spec = P(ctx.col_axes)
+        else:
+            out_spec = ctx.matrix_spec
+
+    mapped = shard_map(
+        local, mesh=ctx.mesh, in_specs=in_specs, out_specs=out_spec
+    )
+    return mapped(*operands)

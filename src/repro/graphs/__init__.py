@@ -1,13 +1,21 @@
 from repro.graphs.synthetic import (
+    SnapshotSequence,
     climate_like_sequence,
+    climate_snapshot_sequence,
+    gaussian_kernel_graph,
     gmm_graph_sequence,
     gmm_points,
+    gmm_snapshot_sequence,
     similarity_graph,
 )
 
 __all__ = [
+    "SnapshotSequence",
     "climate_like_sequence",
+    "climate_snapshot_sequence",
+    "gaussian_kernel_graph",
     "gmm_graph_sequence",
     "gmm_points",
+    "gmm_snapshot_sequence",
     "similarity_graph",
 ]

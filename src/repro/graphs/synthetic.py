@@ -17,7 +17,8 @@ only centralized object, the n x n matrix is born distributed.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import Callable, Iterator
 
 import jax
 import jax.numpy as jnp
@@ -146,3 +147,158 @@ def climate_like_sequence(
     a1 = gaussian_kernel_graph(ctx, base, sigma=sigma, dtype=dtype)
     a2 = gaussian_kernel_graph(ctx, field2, sigma=sigma, dtype=dtype)
     return a1, a2, event_nodes
+
+
+# ---------------------------------------------------------------------------
+# T-length snapshot sequences (the SequenceDetector's input)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SnapshotSequence:
+    """A lazily-built sequence of T sharded snapshots plus per-transition truth.
+
+    Snapshots are built one at a time inside :meth:`snapshots` -- the whole
+    sequence is never resident, matching the engine's two-snapshot budget.
+    ``truth[t]`` holds the ground-truth anomalous nodes for transition
+    (t, t+1), ranked strongest-first (may be empty for quiet transitions).
+    """
+
+    t_steps: int
+    truth: list[np.ndarray]
+    components: np.ndarray | None = None
+    _build: Callable[[int], jax.Array] = field(default=None, repr=False)
+
+    def snapshots(self) -> Iterator[jax.Array]:
+        for t in range(self.t_steps):
+            yield self._build(t)
+
+
+def _gmm_injection(n: int, seed: int, t: int, inject_p: float) -> np.ndarray:
+    """Deterministic per-step injected-edge matrix R_t + R_t^T (numpy)."""
+    rng = np.random.default_rng((seed + 1) * 1_000_003 + t)
+    mask = rng.random((n, n)) < inject_p
+    r = np.where(mask, rng.random((n, n)), 0.0).astype(np.float32)
+    r_sym = (r + r.T) / 2.0
+    np.fill_diagonal(r_sym, 0.0)
+    return r_sym
+
+
+def gmm_snapshot_sequence(
+    ctx: DistContext,
+    n: int,
+    t_steps: int,
+    *,
+    seed: int = 0,
+    noise: float = 0.05,
+    inject_p: float = 0.05,
+    inject_steps: set[int] | None = None,
+    dtype=jnp.float32,
+) -> SnapshotSequence:
+    """T-snapshot GMM sequence: drifting points + per-step edge injections.
+
+    Snapshot 0 is the clean similarity graph; each later snapshot drifts all
+    points by ``noise`` and, at steps in ``inject_steps`` (default: every
+    t >= 1), adds a fresh uniform-edge injection R_t.  Ground truth for
+    transition (t, t+1) is the inter-cluster injected nodes of the two
+    endpoint injections (both the appearance at t+1 and the disappearance of
+    step t's edges are anomalous), ranked by combined injected weight.
+    """
+    if t_steps < 2:
+        raise ValueError("a sequence needs at least 2 snapshots")
+    inject_steps = set(range(1, t_steps)) if inject_steps is None else set(inject_steps)
+    rng = np.random.default_rng(seed)
+    pts0, comp = gmm_points(n, seed)
+    pts_all = [pts0]
+    for _ in range(1, t_steps):
+        pts_all.append(pts_all[-1] + noise * rng.normal(size=pts0.shape).astype(np.float32))
+
+    # Per-step injected inter-cluster weight per node (n,) -- small, so truth
+    # is precomputed; the n x n injections themselves are regenerated lazily.
+    inter = comp[:, None] != comp[None, :]
+    strength: dict[int, np.ndarray] = {}
+    for t in sorted(inject_steps):
+        r_sym = _gmm_injection(n, seed, t, inject_p)
+        strength[t] = (r_sym * inter).sum(1)
+
+    truth = []
+    for t in range(t_steps - 1):
+        s = np.zeros(n, np.float32)
+        for endpoint in (t, t + 1):
+            if endpoint in strength:
+                s = s + strength[endpoint]
+        nodes = np.nonzero(s > 0)[0]
+        truth.append(nodes[np.argsort(-s[nodes])])
+
+    def build(t: int) -> jax.Array:
+        a = similarity_graph(ctx, pts_all[t], dtype=dtype)
+        if t in inject_steps:
+            r_sym = _gmm_injection(n, seed, t, inject_p)
+            a = jnp.add(a, ctx.put_matrix(r_sym)).astype(dtype)
+        return a
+
+    return SnapshotSequence(t_steps=t_steps, truth=truth, components=comp, _build=build)
+
+
+def climate_snapshot_sequence(
+    ctx: DistContext,
+    n_lat: int,
+    n_lon: int,
+    t_steps: int,
+    *,
+    seed: int = 0,
+    sigma: float = 1.0,
+    drift: float = 0.1,
+    event_steps: set[int] | None = None,
+    event_frac: float = 0.02,
+    event_strength: float = 6.0,
+    dtype=jnp.float32,
+):
+    """T-month climate-like sequence; a localized event at ``event_steps``.
+
+    Fields drift smoothly month to month; at steps in ``event_steps``
+    (default: the middle snapshot only) a localized precipitation event is
+    superimposed.  Ground truth for transition (t, t+1) is the event region
+    when the event appears or disappears at that transition, else empty.
+    Returns a :class:`SnapshotSequence`.
+    """
+    if t_steps < 2:
+        raise ValueError("a sequence needs at least 2 snapshots")
+    event_steps = {t_steps // 2} if event_steps is None else set(event_steps)
+    rng = np.random.default_rng(seed)
+    n = n_lat * n_lon
+
+    def smooth_field(x: np.ndarray, passes: int = 8) -> np.ndarray:
+        f = x.reshape(n_lat, n_lon, -1)
+        for _ in range(passes):
+            f = 0.5 * f + 0.125 * (
+                np.roll(f, 1, 0) + np.roll(f, -1, 0) + np.roll(f, 1, 1) + np.roll(f, -1, 1)
+            )
+        return f.reshape(n, -1)
+
+    base = smooth_field(rng.normal(size=(n, 12)).astype(np.float32))
+    fields = [base]
+    for _ in range(1, t_steps):
+        step = smooth_field(drift * rng.normal(size=(n, 12)).astype(np.float32))
+        fields.append(fields[-1] + step)
+
+    n_event = max(1, int(event_frac * n))
+    centre = rng.integers(0, n)
+    ci, cj = divmod(int(centre), n_lon)
+    ii, jj = np.meshgrid(np.arange(n_lat), np.arange(n_lon), indexing="ij")
+    dist = ((ii - ci) ** 2 + (jj - cj) ** 2).reshape(-1)
+    event_nodes = np.argsort(dist)[:n_event]
+    bump = np.zeros((n, 12), np.float32)
+    bump[event_nodes] = event_strength
+    bump = smooth_field(bump, passes=2)
+
+    truth = []
+    for t in range(t_steps - 1):
+        toggled = (t in event_steps) != ((t + 1) in event_steps)
+        truth.append(event_nodes.copy() if toggled else np.empty(0, np.int64))
+
+    def build(t: int) -> jax.Array:
+        f = fields[t] + (bump if t in event_steps else 0.0)
+        return gaussian_kernel_graph(ctx, f, sigma=sigma, dtype=dtype)
+
+    return SnapshotSequence(t_steps=t_steps, truth=truth, components=None, _build=build)

@@ -46,11 +46,13 @@ def _cad_kernel(a1_ref, a2_ref, z1i_ref, z1j_ref, z2i_ref, z2j_ref, v_ref, o_ref
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
-def cad_scores(
+def cad_scores_tile(
     a1: jax.Array,
     a2: jax.Array,
-    z1: jax.Array,
-    z2: jax.Array,
+    z1i: jax.Array,
+    z1j: jax.Array,
+    z2i: jax.Array,
+    z2j: jax.Array,
     vol1: jax.Array,
     vol2: jax.Array,
     *,
@@ -58,16 +60,21 @@ def cad_scores(
     bn: int = 256,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Node anomaly scores F (n,) from two embeddings, fused."""
-    n = a1.shape[0]
-    k = z1.shape[1]
+    """Partial row scores (m,) for one rectangular (m, n) adjacency tile.
+
+    ``z*i`` are the embedding rows for the tile's global rows, ``z*j`` for its
+    global columns -- so a shard_map tile program can run the fused kernel on
+    its local block and psum the partial sums across the column axis.
+    """
+    m, n = a1.shape
+    k = z1i.shape[1]
     from repro.kernels.tiling import fit
 
-    bm, bn = fit(n, bm), fit(n, bn)
+    bm, bn = fit(m, bm), fit(n, bn)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     vols = jnp.stack([vol1, vol2]).astype(jnp.float32).reshape(1, 2)
-    grid = (n // bm, n // bn)
+    grid = (m // bm, n // bn)
     out = pl.pallas_call(
         _cad_kernel,
         grid=grid,
@@ -81,7 +88,25 @@ def cad_scores(
             pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.float32),
         interpret=interpret,
-    )(a1, a2, z1, z1, z2, z2, vols)
+    )(a1, a2, z1i, z1j, z2i, z2j, vols)
     return out[:, 0]
+
+
+def cad_scores(
+    a1: jax.Array,
+    a2: jax.Array,
+    z1: jax.Array,
+    z2: jax.Array,
+    vol1: jax.Array,
+    vol2: jax.Array,
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Node anomaly scores F (n,) from two embeddings, fused (square case)."""
+    return cad_scores_tile(
+        a1, a2, z1, z1, z2, z2, vol1, vol2, bm=bm, bn=bn, interpret=interpret
+    )

@@ -10,9 +10,16 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.kernels.block_matmul import block_matmul
-from repro.kernels.cad_score import cad_scores
+from repro.kernels.cad_score import cad_scores, cad_scores_tile
 from repro.kernels.edge_projection import edge_projection
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.wkv import wkv
 
-__all__ = ["block_matmul", "cad_scores", "edge_projection", "flash_attention", "wkv"]
+__all__ = [
+    "block_matmul",
+    "cad_scores",
+    "cad_scores_tile",
+    "edge_projection",
+    "flash_attention",
+    "wkv",
+]

@@ -18,6 +18,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core.tiles import shard_map
 from repro.models import common as cm
 from repro.models.common import ArchConfig
 
@@ -183,12 +184,12 @@ def _apply_moe_gathered(cfg: ArchConfig, p, x, *, rules, mesh, e_ax, d_ax, batch
     }
     xspec = P(batch_axes, None, None)
     wp = {kk: p[kk] for kk in ("router", "w_gate", "w_up", "w_down")}
-    y_all, aux = jax.shard_map(
+    y_all, aux = shard_map(
         local,
         mesh=mesh,
         in_specs=(xspec, wspec),
         out_specs=(P(None, d_ax), jax.tree.map(lambda _: P(), {"lb_loss": 0, "z_loss": 0})),
-        check_vma=False,
+        check=False,
     )(x, wp)
     # back to batch-sharded layout (tiny resharding collective)
     y = cm.constrain(y_all.reshape(b, s, d), ("batch", "seq", "embed"), rules)
@@ -285,12 +286,12 @@ def apply_moe(cfg: ArchConfig, p, x, *, rules=cm.DEFAULT_RULES):
 
         xspec = P(batch_axes if batch_axes else None, None, None)
         wp = {kk: p[kk] for kk in ("router", "w_gate", "w_up", "w_down")}
-        y, aux = jax.shard_map(
+        y, aux = shard_map(
             local,
             mesh=mesh,
             in_specs=(xspec, wspec),
             out_specs=(xspec, jax.tree.map(lambda _: P(), {"lb_loss": 0, "z_loss": 0})),
-            check_vma=False,
+            check=False,
         )(x, wp)
         y = y.reshape(b * s, d)
 

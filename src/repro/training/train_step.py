@@ -30,6 +30,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.tiles import shard_map
 from repro.models import common as cm
 from repro.models import lm
 from repro.training import optim as opt_mod
@@ -234,13 +235,13 @@ def make_compressed_train_step(
         return params, opt_state, metrics, ef
 
     ef_spec = jax.tree.map(lambda _: P("pod"), pshape)
-    step = jax.shard_map(
+    step = shard_map(
         local,
         mesh=mesh,
         in_specs=(P(), P(), P("pod"), ef_spec),
         out_specs=(P(), P(), P(), ef_spec),
         axis_names={"pod"},
-        check_vma=False,
+        check=False,
     )
 
     def ef_init(params):

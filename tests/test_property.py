@@ -3,6 +3,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the hypothesis package")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import rng as crng

@@ -1,0 +1,108 @@
+"""SequenceDetector: amortized sequence scoring == fresh pairwise scoring."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CommuteConfig,
+    SequenceDetector,
+    chain_build_count,
+    detect_anomalies,
+    detect_sequence_anomalies,
+)
+from repro.graphs import climate_snapshot_sequence, gmm_snapshot_sequence
+
+CFG = CommuteConfig(eps_rp=1e-2, d=6, q=8, schedule="xla")
+
+
+def test_sequence_matches_pairwise_and_builds_once(ctx1):
+    """T=4: transition scores == three fresh detect_anomalies calls, with
+    exactly 4 chain builds (vs 6 for the pairwise path)."""
+    t_steps = 4
+
+    def seq():
+        return gmm_snapshot_sequence(ctx1, 64, t_steps, seed=1, inject_p=0.02)
+
+    builds0 = chain_build_count()
+    res = detect_sequence_anomalies(ctx1, seq().snapshots(), CFG, top_k=5)
+    assert chain_build_count() - builds0 == t_steps
+    assert res.chain_builds == t_steps
+    assert len(res.transitions) == t_steps - 1
+
+    snaps = list(seq().snapshots())
+    for t in range(t_steps - 1):
+        fresh = detect_anomalies(ctx1, snaps[t], snaps[t + 1], CFG, top_k=5)
+        np.testing.assert_array_equal(
+            np.asarray(res.transitions[t].scores), np.asarray(fresh.scores)
+        )
+
+
+def test_sequence_global_topk(ctx1):
+    """Streaming global top-k == top-k over the concatenated score matrix."""
+    res = detect_sequence_anomalies(
+        ctx1, gmm_snapshot_sequence(ctx1, 64, 3, seed=2).snapshots(), CFG, top_k=7
+    )
+    allsc = np.stack([np.asarray(r.scores) for r in res.transitions])
+    order = np.argsort(allsc.ravel())[::-1][:7]
+    want_step, want_idx = np.unravel_index(order, allsc.shape)
+    got = sorted(zip(np.asarray(res.global_top_step), np.asarray(res.global_top_idx)))
+    assert got == sorted(zip(want_step.tolist(), want_idx.tolist()))
+    np.testing.assert_allclose(
+        np.sort(np.asarray(res.global_top_val))[::-1],
+        np.sort(allsc.ravel())[::-1][:7],
+        rtol=1e-6,
+    )
+
+
+def test_sequence_sharded_matches_single(ctx1, ctx22):
+    r1 = detect_sequence_anomalies(
+        ctx1, gmm_snapshot_sequence(ctx1, 64, 3, seed=3).snapshots(), CFG, top_k=5
+    )
+    r2 = detect_sequence_anomalies(
+        ctx22, gmm_snapshot_sequence(ctx22, 64, 3, seed=3).snapshots(), CFG, top_k=5
+    )
+    for a, b in zip(r1.transitions, r2.transitions):
+        np.testing.assert_allclose(
+            np.asarray(a.scores), np.asarray(b.scores), rtol=1e-3, atol=1e-2
+        )
+
+
+def test_sequence_donate_frees_previous(ctx1):
+    seq = gmm_snapshot_sequence(ctx1, 64, 3, seed=4)
+    det = SequenceDetector(ctx1, CFG, top_k=5, donate=True)
+    snaps = list(seq.snapshots())
+    det.push(snaps[0])
+    det.push(snaps[1])  # scores 0->1, then donates snapshot 0's buffers
+    assert snaps[0].is_deleted()
+    assert not snaps[1].is_deleted()
+    res = det.finalize()
+    assert len(res.transitions) == 1
+
+
+def test_sequence_requires_two_snapshots(ctx1):
+    det = SequenceDetector(ctx1, CFG)
+    with pytest.raises(ValueError):
+        det.finalize()
+
+
+def test_climate_sequence_truth_at_event(ctx1):
+    """The event transition carries truth; quiet transitions don't."""
+    seq = climate_snapshot_sequence(ctx1, 8, 8, 4, seed=0, event_frac=0.05)
+    assert seq.t_steps == 4
+    # event at t=2: transitions 1->2 (appears) and 2->3 (disappears) have truth
+    assert len(seq.truth[0]) == 0
+    assert len(seq.truth[1]) > 0
+    assert len(seq.truth[2]) > 0
+    snaps = list(seq.snapshots())
+    assert all(s.shape == (64, 64) for s in snaps)
+
+
+def test_deflate_constant_preserves_sharding(ctx22):
+    """Satellite: deflate_constant constrains output to the rowblock layout."""
+    from repro.core.solver import deflate_constant
+
+    y = ctx22.put_rowblock(np.random.default_rng(0).normal(size=(32, 4)).astype(np.float32))
+    out = deflate_constant(ctx22, y)
+    assert float(jnp.max(jnp.abs(jnp.mean(out, axis=0)))) < 1e-5
+    assert out.sharding.spec == ctx22.rowblock_spec

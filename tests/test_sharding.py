@@ -80,13 +80,15 @@ def test_compressed_pod_allreduce(mesh_pod):
         return compressed_pod_allreduce(g, e, axis="pod")
 
     g_sharded = {"w": grads["w"]}
+    from repro.core.tiles import shard_map
+
     out, new_ef = jax.jit(
-        jax.shard_map(
+        shard_map(
             f,
             mesh=mesh_pod,
             in_specs=({"w": P("pod", None)}, {"w": P()}),
             out_specs=({"w": P("pod", None)}, {"w": P("pod", None)}),
-            check_vma=False,
+            check=False,
         )
     )(g_sharded, ef)
     # each pod's synced grad == mean over pods (within int8 error)

@@ -1,0 +1,112 @@
+"""tile_map: the unified tile-program layer vs dense references, 1x1 and 2x2."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import laplacian as lap
+from repro.core.distmatrix import add_scaled_identity, blockwise_unary, build_from_nodes
+from repro.core.embedding import edge_projection
+from repro.core.tiles import tile_map
+
+
+@pytest.fixture(params=["ctx1", "ctx22"])
+def ctx(request):
+    return request.getfixturevalue(request.param)
+
+
+def test_tile_map_identity_grid(ctx):
+    """Direct tile_map use: materialize I from global row/col ids."""
+    n = 32
+    out = tile_map(
+        ctx,
+        lambda tile: tile.diag_mask().astype(jnp.float32),
+        grid=(n, n),
+        in_specs=(),
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.eye(n, dtype=np.float32))
+
+
+def test_tile_map_row_reduce(ctx):
+    """reduce='cols' psums tile outputs into a row-sharded vector."""
+    rng = np.random.default_rng(0)
+    x = ctx.put_matrix(rng.normal(size=(32, 32)).astype(np.float32))
+    out = tile_map(ctx, lambda tile, blk: blk.sum(axis=1), x, reduce="cols")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x).sum(1), rtol=1e-5, atol=1e-5)
+
+
+def test_build_from_nodes_matches_dense(ctx):
+    rng = np.random.default_rng(1)
+    feats = jnp.asarray(rng.normal(size=(32, 3)).astype(np.float32))
+
+    def kern(xi, xj):
+        return jnp.sum(xi[:, None, :] * xj[None, :, :], -1)
+
+    out = np.asarray(build_from_nodes(ctx, feats, kern))
+    ref = np.asarray(feats) @ np.asarray(feats).T
+    np.fill_diagonal(ref, 0.0)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_blockwise_unary_global_ids(ctx):
+    """fn sees *global* row/col ids regardless of the shard grid."""
+    x = ctx.put_matrix(np.zeros((16, 16), np.float32))
+    out = blockwise_unary(
+        ctx, lambda blk, r, c: blk + r[:, None] * 100.0 + c[None, :], x
+    )
+    r, c = np.meshgrid(np.arange(16), np.arange(16), indexing="ij")
+    np.testing.assert_allclose(np.asarray(out), r * 100.0 + c)
+
+
+def test_add_scaled_identity(ctx):
+    x = ctx.put_matrix(np.ones((16, 16), np.float32))
+    out = np.asarray(add_scaled_identity(ctx, x, 2.5))
+    np.testing.assert_allclose(out, np.ones((16, 16)) + 2.5 * np.eye(16))
+
+
+def test_degrees_matches_dense(ctx):
+    rng = np.random.default_rng(2)
+    a = np.abs(rng.normal(size=(32, 32))).astype(np.float32)
+    out = np.asarray(lap.degrees(ctx, ctx.put_matrix(a)))
+    np.testing.assert_allclose(out, a.sum(1), rtol=1e-5, atol=1e-4)
+
+
+def test_edge_projection_mesh_invariant(ctx1, ctx22):
+    """The tile program reproduces the same Y on any shard grid."""
+    rng = np.random.default_rng(3)
+    a = np.abs(rng.normal(size=(32, 32))).astype(np.float32)
+    a = (a + a.T) / 2
+    np.fill_diagonal(a, 0.0)
+    y1 = np.asarray(edge_projection(ctx1, ctx1.put_matrix(a), seed=7, k=4))
+    y2 = np.asarray(edge_projection(ctx22, ctx22.put_matrix(a), seed=7, k=4))
+    np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-5)
+
+
+def test_tile_map_rejects_nondivisible(ctx22):
+    with pytest.raises(ValueError, match="divide"):
+        tile_map(
+            ctx22,
+            lambda tile: jnp.zeros(tile.block_shape),
+            grid=(31, 31),
+            in_specs=(),
+        )
+
+
+def test_tile_map_requires_grid_without_matrix_operand(ctx1):
+    feats = jnp.zeros((8, 2))
+    with pytest.raises(ValueError, match="grid"):
+        tile_map(ctx1, lambda tile, f: f, feats, in_specs=(P(None, None),))
+
+
+def test_axis_index_only_in_tiles():
+    """All five former hand-rolled tile programs route through tile_map."""
+    import pathlib
+
+    core = pathlib.Path(__file__).parent.parent / "src" / "repro" / "core"
+    offenders = [
+        p.name
+        for p in core.glob("*.py")
+        if p.name != "tiles.py" and "axis_index" in p.read_text()
+    ]
+    assert not offenders, f"hand-rolled axis_index outside tiles.py: {offenders}"
