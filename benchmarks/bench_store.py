@@ -1,0 +1,158 @@
+"""Out-of-core scoring: streamed (store-backed) vs resident throughput,
+and the max-n-before-OOM picture under a per-device adjacency residency budget.
+
+The acceptance demo for the snapshot store: a T-snapshot sequence whose
+*total adjacency bytes exceed the configured per-device residency budget* is
+written to disk tile-by-tile (the n x n snapshots are never materialized on
+the host either) and scored end-to-end by the streaming tile executor, whose
+measured peak adjacency residency stays within the budget.  The resident
+baseline must hold two full snapshots and busts the same budget at much
+smaller n.
+
+The budget governs *adjacency* residency -- the term the store eliminates.
+The chain matrices (S, P, P1, P2) remain device-resident either way; that is
+the next scale axis (see ROADMAP "Open items").
+
+  PYTHONPATH=src python benchmarks/bench_store.py --n 512 --t-steps 4 \
+      --grid 8 --budget-mb 1.0 --out benchmarks/bench_store.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core import (
+    CommuteConfig,
+    SequenceDetector,
+    reset_stream_stats,
+    stream_stats,
+    trivial_context,
+)
+from repro.graphs import gmm_store_sequence
+from repro.store import TileStore
+
+
+def run(n=512, t_steps=4, grid=8, budget_mb=1.0, d=4, q=6, eps=1e-2,
+        store_dir=None, out_path=None, out=print):
+    if t_steps < 2:
+        raise ValueError(f"need at least 2 snapshots to score a transition, got t_steps={t_steps}")
+    ctx = trivial_context()
+    cfg = CommuteConfig(eps_rp=eps, d=d, q=q, schedule="xla")
+    budget = int(budget_mb * 1e6)
+
+    tmp = None
+    if store_dir is None:
+        tmp = tempfile.TemporaryDirectory(prefix="caddelag_store_")
+        store_dir = tmp.name
+
+    # -- write the sequence tile-by-tile (fully out-of-core) ----------------
+    t0 = time.perf_counter()
+    store = TileStore.create(store_dir, n=n, grid=grid,
+                             meta={"dataset": "gmm-store", "n": n, "seed": 0})
+    ids = gmm_store_sequence(store, t_steps, seed=0)
+    write_s = time.perf_counter() - t0
+    total_bytes = t_steps * store.snapshot_nbytes
+    panel_bytes = store.tile_rows * n * 4
+
+    # -- streamed pass: adjacencies never fully device-resident -------------
+    reset_stream_stats()
+    det = SequenceDetector(ctx, cfg, top_k=10)
+    t0 = time.perf_counter()
+    res_s = det.run(store.snapshot(sid) for sid in ids)
+    jax.block_until_ready(res_s.transitions[-1].scores)
+    stream_s = time.perf_counter() - t0
+    st = stream_stats()
+
+    # -- resident pass: each snapshot loaded whole (the old path) -----------
+    det = SequenceDetector(ctx, cfg, top_k=10)
+    t0 = time.perf_counter()
+    res_r = det.run(ctx.put_matrix(store.snapshot(sid).to_numpy()) for sid in ids)
+    jax.block_until_ready(res_r.transitions[-1].scores)
+    resident_s = time.perf_counter() - t0
+    resident_peak = 2 * store.snapshot_nbytes  # engine keeps two endpoints
+
+    bitwise = all(
+        np.array_equal(np.asarray(a.scores), np.asarray(b.scores))
+        for a, b in zip(res_s.transitions, res_r.transitions)
+    )
+
+    out(f"[bench_store] n={n} T={t_steps} grid={grid}x{grid} "
+        f"({store.snapshot_nbytes / 1e6:.1f} MB/snapshot, {total_bytes / 1e6:.1f} MB total, "
+        f"written in {write_s:.1f}s)")
+    out(f"[bench_store] budget {budget / 1e6:.2f} MB: total/budget = {total_bytes / budget:.1f}x "
+        f"{'(exceeds budget -- the out-of-core case)' if total_bytes > budget else ''}")
+    out(f"[bench_store] streamed: {stream_s:.1f}s "
+        f"({(t_steps - 1) and stream_s / (t_steps - 1):.2f}s/transition), "
+        f"peak adjacency residency {st.peak_live_bytes / 1e6:.2f} MB "
+        f"({st.panels} panels, {st.bytes_h2d / 1e6:.1f} MB H2D) "
+        f"-> {'WITHIN' if st.peak_live_bytes <= budget else 'OVER'} budget")
+    out(f"[bench_store] resident: {resident_s:.1f}s, "
+        f"peak adjacency residency {resident_peak / 1e6:.2f} MB "
+        f"-> {'WITHIN' if resident_peak <= budget else 'OVER'} budget")
+    out(f"[bench_store] streamed == resident scores (bitwise): {bitwise}")
+
+    # -- max-n before the budget OOMs the adjacency working set -------------
+    # resident: two full snapshots, 2 * n^2 * 4 bytes.
+    # streamed: four in-flight panels (2 operands x double buffer),
+    #           4 * (n/grid) * n * 4 bytes.
+    n_res = int(math.isqrt(budget // 8))
+    n_str = int(math.isqrt(budget * grid // 16))
+    out(f"[bench_store] max n within {budget / 1e6:.2f} MB adjacency budget: "
+        f"resident ~{n_res}, streamed (grid={grid}) ~{n_str} "
+        f"({n_str / max(n_res, 1):.1f}x)")
+
+    result = {
+        "bench": "store",
+        "n": n, "t_steps": t_steps, "grid": grid,
+        "snapshot_mb": store.snapshot_nbytes / 1e6,
+        "total_mb": total_bytes / 1e6,
+        "budget_mb": budget / 1e6,
+        "total_exceeds_budget": total_bytes > budget,
+        "write_s": write_s,
+        "streamed_s": stream_s,
+        "resident_s": resident_s,
+        "streamed_peak_mb": st.peak_live_bytes / 1e6,
+        "streamed_panels": st.panels,
+        "streamed_h2d_mb": st.bytes_h2d / 1e6,
+        "streamed_within_budget": st.peak_live_bytes <= budget,
+        "resident_peak_mb": resident_peak / 1e6,
+        "resident_within_budget": resident_peak <= budget,
+        "panel_mb": panel_bytes / 1e6,
+        "bitwise_equal": bitwise,
+        "max_n_resident": n_res,
+        "max_n_streamed": n_str,
+    }
+    if out_path:
+        Path(out_path).write_text(json.dumps(result, indent=2))
+        out(f"[bench_store] wrote {out_path}")
+    if tmp is not None:
+        tmp.cleanup()
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=512)
+    ap.add_argument("--t-steps", type=int, default=4)
+    ap.add_argument("--grid", type=int, default=8)
+    ap.add_argument("--budget-mb", type=float, default=1.0)
+    ap.add_argument("--d", type=int, default=4)
+    ap.add_argument("--q", type=int, default=6)
+    ap.add_argument("--eps", type=float, default=1e-2)
+    ap.add_argument("--store-dir", default=None, help="persist the store (default: temp dir)")
+    ap.add_argument("--out", default=None, help="write results JSON here")
+    args = ap.parse_args()
+    run(n=args.n, t_steps=args.t_steps, grid=args.grid, budget_mb=args.budget_mb,
+        d=args.d, q=args.q, eps=args.eps, store_dir=args.store_dir, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

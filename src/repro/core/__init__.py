@@ -29,7 +29,15 @@ from repro.core.embedding import (
 )
 from repro.core.sequence import SequenceDetector, SequenceResult, detect_sequence_anomalies
 from repro.core.solver import estimate_solution, residual_norm
-from repro.core.tiles import Tile, tile_map
+from repro.core.tiles import (
+    StreamStats,
+    Tile,
+    is_streamable,
+    reset_stream_stats,
+    stream_stats,
+    tile_map,
+    tile_stream,
+)
 
 __all__ = [
     "CADResult",
@@ -40,6 +48,7 @@ __all__ = [
     "SCHEDULES",
     "SequenceDetector",
     "SequenceResult",
+    "StreamStats",
     "Tile",
     "build_from_nodes",
     "chain_build_count",
@@ -51,13 +60,17 @@ __all__ = [
     "edge_projection",
     "estimate_solution",
     "exact_commute_distances",
+    "is_streamable",
     "make_context",
     "matmul",
     "matmul_rowblock",
     "node_anomaly_scores",
     "reset_chain_build_count",
+    "reset_stream_stats",
     "residual_norm",
+    "stream_stats",
     "tile_map",
+    "tile_stream",
     "top_anomalies",
     "trivial_context",
 ]

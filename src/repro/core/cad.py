@@ -22,7 +22,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.distmatrix import DistContext
 from repro.core.embedding import CommuteConfig, Embedding, commute_time_embedding
-from repro.core.tiles import tile_map
+from repro.core.tiles import is_streamable, tile_map, tile_stream
 
 
 def node_anomaly_scores(
@@ -39,6 +39,11 @@ def node_anomaly_scores(
     ``use_kernel=True`` swaps the tile body for the fused Pallas scorer
     (:func:`repro.kernels.cad_score.cad_scores_tile`) -- the tile program owns
     distribution, the kernel owns the on-chip schedule.
+
+    Either adjacency may be a store-backed snapshot handle: the scorer then
+    streams matching row panels of both endpoints (double-buffered prefetch)
+    and the same tile body runs off-core, bitwise identical to the resident
+    run.  Only the (n, k_RP) embeddings stay device-resident.
     """
 
     def tile_fn(tile, b1, b2, z1, z2, v1, v2):
@@ -64,7 +69,8 @@ def node_anomaly_scores(
     # Z is (n, k_RP) -- small; replicate it for tile-local access to rows+cols.
     z1 = ctx.constrain(e1.z, P(None, None))
     z2 = ctx.constrain(e2.z, P(None, None))
-    return tile_map(
+    runner = tile_stream if is_streamable(a1) or is_streamable(a2) else tile_map
+    return runner(
         ctx,
         tile_fn,
         a1,

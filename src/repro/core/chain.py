@@ -22,9 +22,12 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax import lax
 
 from repro.core import laplacian as lap
 from repro.core.distmatrix import DistContext, add_scaled_identity, blockwise_unary, matmul
+from repro.core.tiles import is_streamable, stream_stats
 
 # Build counter: chain_product is the O(n^3) hot spot, so the sequence engine
 # (and its tests) track exactly how many times it runs.
@@ -59,6 +62,33 @@ class ChainOperator:
         return cls(*children)
 
 
+def _matmul_panels_from_store(ctx: DistContext, m: jax.Array, h, out_dtype) -> jax.Array:
+    """M @ A with A streamed from the store: per-panel GEMM accumulation.
+
+    M @ A = sum_K M[:, K] @ A[K, :] over row panels K of the stored adjacency
+    -- each term is one resident (n, ph) x (ph, n) GEMM against a panel
+    fetched from host/disk, so A is never fully device-resident.  (Used by
+    the ``fuse_l`` build; the panel-accumulation order makes this path
+    close-but-not-bitwise vs the resident ``fuse_l`` GEMM.)
+    """
+    n = h.shape[0]
+    ph = int(np.lcm(int(h.panel_rows), ctx.n_row_shards))
+    sharding = ctx.sharding(ctx.matrix_spec)
+    st = stream_stats()
+    acc = jax.device_put(jnp.zeros((n, n), jnp.float32), sharding)
+    for r0 in range(0, n, ph):
+        panel = jax.device_put(np.ascontiguousarray(h.read_panel(r0, ph)), sharding)
+        st.panels += 1
+        st.bytes_h2d += panel.nbytes
+        st._note_live(panel.nbytes)
+        m_cols = lax.dynamic_slice(m, (0, r0), (n, ph))
+        acc = acc + jnp.dot(
+            m_cols.astype(jnp.float32), panel.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+    return ctx.constrain(acc.astype(out_dtype), ctx.matrix_spec)
+
+
 def chain_product(
     ctx: DistContext,
     a: jax.Array,
@@ -70,6 +100,19 @@ def chain_product(
     fuse_l: bool = False,
     use_kernel: bool = False,
 ) -> ChainOperator:
+    """Build the chain operator from ``a``: a resident sharded adjacency or a
+    store-backed snapshot handle.
+
+    With a handle, every consumer of A streams: the degree pass, the
+    normalized-adjacency build (S, the first chain GEMM's operand, assembled
+    per-tile from store panels) and the Laplacian build each make one pass
+    over the stored tiles, so the raw n x n adjacency is never device-resident
+    -- only the (already required) chain matrices are.  With the default
+    ``fuse_l=False`` the streamed build is bitwise identical to the resident
+    one (all A-consuming passes are elementwise or row-parallel); the opt-in
+    ``fuse_l=True`` path instead accumulates Z^ @ A per panel, whose reduction
+    order differs from the resident single GEMM -- allclose, not bitwise.
+    """
     if d_len < 1:
         raise ValueError("chain length d must be >= 1")
     global _BUILD_COUNT
@@ -98,7 +141,10 @@ def chain_product(
         p1d = blockwise_unary(
             ctx, lambda blk, r, c: blk.astype(jnp.float32) * deg[c][None, :], p1, out_dtype=dtype
         )
-        p2 = jnp.subtract(p1d, mm(p1, a.astype(dtype)))
+        if is_streamable(a):
+            p2 = jnp.subtract(p1d, _matmul_panels_from_store(ctx, p1, a, dtype))
+        else:
+            p2 = jnp.subtract(p1d, mm(p1, a.astype(dtype)))
     else:
         l_mat = lap.laplacian(ctx, a, deg, dtype=dtype)
         p2 = mm(p1, l_mat)

@@ -39,7 +39,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.tiles import pcast_varying, shard_map, tile_map
+from repro.core.tiles import is_streamable, pcast_varying, shard_map, tile_map, tile_stream
 
 SCHEDULES = ("xla", "summa", "cannon")
 
@@ -257,14 +257,19 @@ def blockwise_unary(
     *,
     out_dtype=None,
 ) -> jax.Array:
-    """Apply ``fn(block, global_rows, global_cols) -> block`` tile-locally."""
+    """Apply ``fn(block, global_rows, global_cols) -> block`` tile-locally.
+
+    ``x`` may be a store-backed snapshot handle (see :mod:`repro.store`): the
+    transform then *streams* -- each row panel is fetched from host/disk,
+    transformed, and written into the sharded output, so the raw input is
+    never device-resident (this is how the chain build materializes S and L
+    without ever loading A).
+    """
     out_dtype = out_dtype or x.dtype
-    return tile_map(
-        ctx,
-        lambda tile, blk: fn(blk, tile.rows, tile.cols),
-        x,
-        out_dtype=out_dtype,
-    )
+    body = lambda tile, blk: fn(blk, tile.rows, tile.cols)
+    if is_streamable(x):
+        return tile_stream(ctx, body, x, out_dtype=out_dtype)
+    return tile_map(ctx, body, x, out_dtype=out_dtype)
 
 
 def add_scaled_identity(ctx: DistContext, x: jax.Array, scale=1.0) -> jax.Array:

@@ -18,14 +18,13 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core import rng as crng
 from repro.core.chain import ChainOperator, chain_product
 from repro.core.distmatrix import DistContext
 from repro.core.solver import estimate_solution
-from repro.core.tiles import tile_map
+from repro.core.tiles import is_streamable, tile_map, tile_stream
 
 
 @dataclass(frozen=True)
@@ -53,21 +52,33 @@ def edge_projection(ctx: DistContext, a: jax.Array, seed: int, k: int) -> jax.Ar
 
     Y[i, c] = sum_j sqrt(A[i, j]) * Q_c[i, j] with Q_c antisymmetric +/-1.
     Entries scaled 1/sqrt(k) (Johnson-Lindenstrauss normalization).
+
+    All k Rademacher columns are generated in one vectorized (pr, pc, k) pass
+    per tile -- same counter hash, same per-column reduction order (hence
+    bitwise identical to the former sequential ``fori_loop``), but the VPU
+    sees one fused multiply-reduce instead of k dependent passes (this is the
+    layout the Pallas kernel in :mod:`repro.kernels.edge_projection` uses).
+    ``a`` may be a store-backed snapshot handle; the projection then streams
+    row panels (one pass over A either way).
     """
 
     def tile_fn(tile, blk):
         s = jnp.sqrt(jnp.maximum(blk.astype(jnp.float32), 0.0))
+        q = crng.edge_rademacher(
+            seed,
+            tile.rows[:, None, None],
+            tile.cols[None, :, None],
+            jnp.arange(k, dtype=jnp.uint32)[None, None, :],
+        )
+        # sum (not einsum): reduces each column over axis 1 in the same order
+        # as the sequential per-column pass, keeping the output bit-identical.
+        return jnp.sum(s[:, :, None] * q, axis=1)
 
-        def col(cc, acc):
-            q = crng.edge_rademacher(seed, tile.rows[:, None], tile.cols[None, :], cc)
-            return acc.at[:, cc].set(jnp.sum(s * q, axis=1))
-
-        # tile.varying: carry must match the body output's varying type.
-        pr = tile.block_shape[0]
-        acc0 = tile.varying(jnp.zeros((pr, k), jnp.float32))
-        return lax.fori_loop(0, k, col, acc0)
-
-    y = tile_map(ctx, tile_fn, a, reduce="cols", out_spec=P(ctx.row_axes, None))
+    kwargs = dict(reduce="cols", out_spec=P(ctx.row_axes, None))
+    if is_streamable(a):
+        y = tile_stream(ctx, tile_fn, a, **kwargs)
+    else:
+        y = tile_map(ctx, tile_fn, a, **kwargs)
     return y * (1.0 / jnp.sqrt(jnp.float32(k)))
 
 
@@ -86,6 +97,12 @@ def commute_time_embedding(
     op: ChainOperator | None = None,
     use_kernel: bool = False,
 ) -> Embedding:
+    """Z (n, k_RP) commute-time embedding of ``a`` (Algorithm 3).
+
+    ``a`` may be a resident sharded adjacency or a store-backed snapshot
+    handle -- with a handle, the chain build and the edge projection stream
+    row panels from the store and A is never fully device-resident.
+    """
     n = a.shape[0]
     k = cfg.k_rp(n)
     if op is None:

@@ -12,14 +12,19 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.distmatrix import DistContext, blockwise_unary
-from repro.core.tiles import tile_map
+from repro.core.tiles import is_streamable, tile_map, tile_stream
 
 
 def degrees(ctx: DistContext, a: jax.Array) -> jax.Array:
-    """d = A @ 1 as a replicated-column, row-sharded (n,) vector."""
-    return tile_map(
-        ctx, lambda tile, blk: blk.astype(jnp.float32).sum(axis=1), a, reduce="cols"
-    )
+    """d = A @ 1 as a replicated-column, row-sharded (n,) vector.
+
+    Accepts a resident sharded adjacency or a store-backed snapshot handle;
+    the streamed run is bitwise identical (row sums are row-parallel).
+    """
+    body = lambda tile, blk: blk.astype(jnp.float32).sum(axis=1)
+    if is_streamable(a):
+        return tile_stream(ctx, body, a, reduce="cols")
+    return tile_map(ctx, body, a, reduce="cols")
 
 
 def volume(ctx: DistContext, deg: jax.Array) -> jax.Array:

@@ -14,6 +14,13 @@ snapshots (adjacency + embedding) are resident at any time.  With
 buffers after its last use (double buffering) -- callers must not touch a
 donated snapshot again.
 
+Out-of-core mode: ``push`` (and ``run``) also accept store-backed snapshot
+handles (:class:`repro.store.SnapshotHandle`, e.g. from
+``TileStore.iter_snapshots()``).  Handles are scored by the streaming tile
+executor -- adjacencies stay on host/disk and devices only ever hold two row
+*panels* per operand, so residency is bounded by tiles, not snapshots, and n
+is bounded by host/disk capacity rather than HBM.
+
 A streaming global top-k across all transitions is maintained on device:
 after each transition the per-transition top-k is merged into the running
 global top-k with one ``lax.top_k`` over 2k candidates.
@@ -111,9 +118,12 @@ class SequenceDetector:
             except Exception:  # already deleted / not deletable (tracers)
                 pass
 
-    def push(self, a: jax.Array) -> CADResult | None:
+    def push(self, a) -> CADResult | None:
         """Consume snapshot t; returns the CADResult for transition (t-1, t).
 
+        ``a`` is a resident sharded adjacency or a store-backed snapshot
+        handle (streamed off-core; scores bitwise-identical to the resident
+        run with the default chain build, allclose under ``fuse_l=True``).
         Builds exactly one chain operator (for ``a``); the left endpoint's
         operator was built when *it* was pushed.
         """

@@ -15,6 +15,15 @@ so they can drop into a Pallas kernel for the inner loop (see
 ``node_anomaly_scores``) -- the tile program handles distribution, the kernel
 handles the single-chip schedule.
 
+``tile_stream(ctx, fn, *operands)`` is the out-of-core twin: operands may be
+store-backed snapshot handles (see :mod:`repro.store`) instead of resident
+arrays, and the same tile bodies run over row panels fetched from host/disk
+with double-buffered host->device prefetch.  Device residency is bounded by
+two panels per streamed operand, not by n^2 -- the row-parallel tile programs
+(degrees, edge projection, CAD scoring, blockwise builds) are bitwise
+identical to their resident runs because each output row sees exactly the
+same per-device reduction extents either way.
+
 This module also owns the version-compat shims for the manual-sharding API
 (``jax.shard_map`` vs ``jax.experimental.shard_map``; ``lax.pcast`` /
 ``lax.pvary`` vs nothing) so the rest of the core is version-agnostic.
@@ -27,6 +36,7 @@ from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
@@ -122,6 +132,48 @@ def _axes_index(ctx, axes: Sequence[str]) -> jax.Array:
     return idx
 
 
+def _tile_local(
+    ctx,
+    fn: Callable[..., jax.Array],
+    pr: int,
+    pc: int,
+    reduce_axes,
+    out_dtype,
+    *,
+    with_origin: bool = False,
+):
+    """Shared per-device body for :func:`tile_map` and :func:`tile_stream`.
+
+    With ``with_origin=True`` the wrapped function takes a leading (traced)
+    global row offset, so one compiled program serves every streamed panel.
+    """
+    mesh_axes = tuple(ctx.row_axes) + tuple(ctx.col_axes)
+
+    def local(*args):
+        if with_origin:
+            origin, *blocks = args
+        else:
+            origin, blocks = jnp.int32(0), args
+        r = _axes_index(ctx, ctx.row_axes)
+        c = _axes_index(ctx, ctx.col_axes)
+        tile = Tile(
+            rows=origin + r * pr + jnp.arange(pr),
+            cols=c * pc + jnp.arange(pc),
+            row_index=origin // pr + r,
+            col_index=c,
+            block_shape=(pr, pc),
+            mesh_axes=mesh_axes,
+        )
+        out = fn(tile, *blocks)
+        if reduce_axes is not None:
+            out = lax.psum(out, reduce_axes)
+        if out_dtype is not None:
+            out = out.astype(out_dtype)
+        return out
+
+    return local
+
+
 def tile_map(
     ctx,
     fn: Callable[..., jax.Array],
@@ -176,25 +228,7 @@ def tile_map(
         raise ValueError(f"reduce must be None, 'cols' or 'rows', got {reduce!r}")
     reduce_axes = {"cols": ctx.col_axes, "rows": ctx.row_axes, None: None}[reduce]
 
-    mesh_axes = tuple(ctx.row_axes) + tuple(ctx.col_axes)
-
-    def local(*blocks):
-        r = _axes_index(ctx, ctx.row_axes)
-        c = _axes_index(ctx, ctx.col_axes)
-        tile = Tile(
-            rows=r * pr + jnp.arange(pr),
-            cols=c * pc + jnp.arange(pc),
-            row_index=r,
-            col_index=c,
-            block_shape=(pr, pc),
-            mesh_axes=mesh_axes,
-        )
-        out = fn(tile, *blocks)
-        if reduce_axes is not None:
-            out = lax.psum(out, reduce_axes)
-        if out_dtype is not None:
-            out = out.astype(out_dtype)
-        return out
+    local = _tile_local(ctx, fn, pr, pc, reduce_axes, out_dtype)
 
     if out_spec is None:
         if reduce == "cols":
@@ -204,7 +238,254 @@ def tile_map(
         else:
             out_spec = ctx.matrix_spec
 
-    mapped = shard_map(
-        local, mesh=ctx.mesh, in_specs=in_specs, out_specs=out_spec
+    # jit for numeric parity with tile_stream: both executors compile their
+    # tile program through the same pipeline, so a streamed run is bitwise
+    # identical to the resident run (XLA fuses jit and eager-dispatch
+    # programs slightly differently).
+    mapped = jax.jit(
+        shard_map(local, mesh=ctx.mesh, in_specs=in_specs, out_specs=out_spec)
     )
     return mapped(*operands)
+
+
+# ---------------------------------------------------------------------------
+# the streaming tile executor (out-of-core operands)
+# ---------------------------------------------------------------------------
+
+
+def is_streamable(x) -> bool:
+    """True for store-backed snapshot handles (duck-typed, no store import).
+
+    The protocol: ``shape`` (n0, n1), ``dtype``, ``panel_rows`` (preferred
+    streaming height) and ``read_panel(row0, height) -> host array``.
+    :class:`repro.store.SnapshotHandle` satisfies it; so can any user object.
+    """
+    return (
+        not isinstance(x, (jax.Array, np.ndarray))
+        and hasattr(x, "read_panel")
+        and hasattr(x, "panel_rows")
+        and hasattr(x, "shape")
+    )
+
+
+@dataclass
+class StreamStats:
+    """Process-wide accounting of the streaming executor (see stream_stats())."""
+
+    panels: int = 0  # row panels fetched host -> device
+    bytes_h2d: int = 0  # bytes device_put by the executor
+    peak_live_bytes: int = 0  # max bytes of executor-owned panels live at once
+    calls: int = 0  # tile_stream invocations
+
+    def _note_live(self, live: int) -> None:
+        self.peak_live_bytes = max(self.peak_live_bytes, live)
+
+
+_STREAM_STATS = StreamStats()
+
+
+def stream_stats() -> StreamStats:
+    """Counters since process start / last :func:`reset_stream_stats`."""
+    return _STREAM_STATS
+
+
+def reset_stream_stats() -> StreamStats:
+    global _STREAM_STATS
+    _STREAM_STATS = StreamStats()
+    return _STREAM_STATS
+
+
+class _PanelSource:
+    """Row-panel fetcher over a streamable handle or a resident array."""
+
+    def __init__(self, x, streamed: bool):
+        self.x = x
+        self.streamed = streamed
+
+    def fetch(self, row0: int, height: int):
+        if self.streamed:
+            return self.x.read_panel(row0, height)
+        return self.x[row0 : row0 + height]
+
+
+def _infer_panel_rows(handles, n0: int, n_row_shards: int) -> int:
+    """Smallest height that is tile-aligned for every handle and shardable."""
+    quanta = [int(h.panel_rows) for h in handles] + [n_row_shards]
+    rows = int(np.lcm.reduce(np.asarray(quanta, np.int64)))
+    if n0 % rows:
+        raise ValueError(
+            f"no common panel height: operand tile rows {quanta} don't tile n0={n0}"
+        )
+    return rows
+
+
+def tile_stream(
+    ctx,
+    fn: Callable[..., jax.Array],
+    *operands,
+    grid: tuple[int, int] | None = None,
+    in_specs: Sequence[P] | None = None,
+    out_spec: P | None = None,
+    reduce: str | None = None,
+    out_dtype=None,
+    panel_rows: int | None = None,
+) -> jax.Array:
+    """Run a :func:`tile_map` body over *streamed* row panels of the operands.
+
+    The out-of-core execution path: operands that satisfy the snapshot-handle
+    protocol (:func:`is_streamable`) are fetched from host/disk one full-width
+    row panel at a time and fed to ``fn`` under the same :class:`Tile`
+    contract as ``tile_map`` -- existing tile bodies (degrees, edge
+    projection, blockwise builds, the Pallas CAD scorer) run unchanged, with
+    ``tile.rows`` carrying the true global ids of the current panel.
+
+    Double-buffered prefetch: the ``jax.device_put`` of panel t+1 is issued
+    before the compute on panel t is dispatched, so the host->device copy
+    overlaps the tile program (JAX transfers and dispatch are async).  Device
+    residency for each streamed operand is therefore at most two panels.
+
+    Bitwise contract: every supported body is row-parallel (output rows
+    [r0:r1] depend only on operand rows [r0:r1]), and a panel run splits the
+    mesh reduction extents exactly as the resident run does, so results are
+    bitwise identical to ``tile_map`` on the same mesh.
+
+    Args mirror :func:`tile_map`; additionally ``panel_rows`` overrides the
+    streaming unit (default: the finest tile-aligned height that divides the
+    row-shard grid).  ``reduce`` may be ``None`` (the (n0, n1) output is
+    assembled panel-by-panel into a sharded buffer, donated between updates)
+    or ``"cols"`` (per-panel row reductions are concatenated).
+    """
+    if reduce not in (None, "cols"):
+        raise ValueError(f"tile_stream supports reduce=None or 'cols', got {reduce!r}")
+    if in_specs is None:
+        in_specs = tuple(ctx.matrix_spec for _ in operands)
+    in_specs = tuple(in_specs)
+    if len(in_specs) != len(operands):
+        raise ValueError(f"{len(operands)} operands but {len(in_specs)} in_specs")
+
+    handles = [op for op in operands if is_streamable(op)]
+    if grid is None:
+        if not handles:
+            raise ValueError("grid= is required when no operand is streamable")
+        grid = tuple(handles[0].shape)
+    n0, n1 = grid
+    for h in handles:
+        if tuple(h.shape) != (n0, n1):
+            raise ValueError(f"streamed operand is {h.shape}, grid is {grid}")
+
+    R, C = ctx.n_row_shards, ctx.n_col_shards
+    if panel_rows is None:
+        panel_rows = _infer_panel_rows(handles, n0, R) if handles else n0
+    if n0 % panel_rows or panel_rows % R or n1 % C:
+        raise ValueError(
+            f"panel_rows={panel_rows} must divide n0={n0} and the {R}x{C} shard grid"
+        )
+    pr, pc = panel_rows // R, n1 // C
+
+    # Streamed operands: anything satisfying the handle protocol, plus
+    # resident matrix-sharded arrays of the full grid shape (mixed
+    # resident/store transitions slice their panels on device).
+    sources: list[_PanelSource | None] = []
+    for op, spec in zip(operands, in_specs):
+        if is_streamable(op):
+            sources.append(_PanelSource(op, streamed=True))
+        elif spec == ctx.matrix_spec and getattr(op, "shape", None) == (n0, n1):
+            sources.append(_PanelSource(op, streamed=False))
+        else:
+            sources.append(None)  # per-call constant (replicated table, scalar)
+
+    reduce_axes = ctx.col_axes if reduce == "cols" else None
+    local = _tile_local(ctx, fn, pr, pc, reduce_axes, out_dtype, with_origin=True)
+
+    panel_in_specs = []
+    for spec, src in zip(in_specs, sources):
+        panel_in_specs.append(ctx.matrix_spec if src is not None else spec)
+    if out_spec is None:
+        out_spec = ctx.vector_spec if reduce == "cols" else ctx.matrix_spec
+    panel_out_spec = out_spec
+
+    # jit so panels after the first hit the compile cache (eager shard_map
+    # retraces per call; one compiled program serves the whole panel walk
+    # because the row origin is a traced operand, not a constant).
+    mapped = jax.jit(
+        shard_map(
+            local,
+            mesh=ctx.mesh,
+            in_specs=(P(), *panel_in_specs),
+            out_specs=panel_out_spec,
+        )
+    )
+
+    stats = _STREAM_STATS
+    stats.calls += 1
+    consts = [op for op, src in zip(operands, sources) if src is None]
+    panel_sharding = ctx.sharding(ctx.matrix_spec)
+
+    def put_panels(row0: int):
+        """Fetch + device_put one row panel of every streamed operand."""
+        out, nbytes = [], 0
+        for src in sources:
+            if src is None:
+                continue
+            host = src.fetch(row0, panel_rows)
+            if src.streamed:
+                dev = jax.device_put(np.ascontiguousarray(host), panel_sharding)
+                nbytes += dev.nbytes
+                stats.panels += 1
+            else:
+                dev = host  # already device-resident; slicing is a device op
+            out.append(dev)
+        stats.bytes_h2d += nbytes
+        return out, nbytes
+
+    def run_panel(row0: int, panels):
+        args = []
+        it = iter(panels)
+        jt = iter(consts)
+        for src in sources:
+            args.append(next(it) if src is not None else next(jt))
+        return mapped(jnp.int32(row0), *args)
+
+    # reduce="cols" panel outputs are small row reductions -- collect and
+    # concatenate.  reduce=None assembles the (n0, n1) output *incrementally*
+    # (buffer donated between updates), so at most one output buffer plus the
+    # in-flight panels are ever live -- never all panels at once.
+    out_sharding = ctx.sharding(out_spec)
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    update = jax.jit(
+        lambda buf, blk, r0: lax.dynamic_update_slice(buf, blk, (r0, jnp.int32(0))),
+        donate_argnums=donate,
+        out_shardings=out_sharding,
+    )
+    reduced_outs: list[jax.Array] = []
+    buf = None
+
+    def consume(row0: int, panels):
+        nonlocal buf
+        out = run_panel(row0, panels)
+        if reduce == "cols":
+            reduced_outs.append(out)
+        else:
+            if buf is None:
+                buf = jax.device_put(jnp.zeros((n0, n1), out.dtype), out_sharding)
+            buf = update(buf, out, jnp.int32(row0))
+
+    origins = list(range(0, n0, panel_rows))
+    cur, cur_bytes = put_panels(origins[0])
+    for r0, nxt_r0 in zip(origins, origins[1:]):
+        nxt, nxt_bytes = put_panels(nxt_r0)  # H2D for t+1 before compute on t
+        stats._note_live(cur_bytes + nxt_bytes)
+        consume(r0, cur)
+        cur, cur_bytes = nxt, nxt_bytes
+    stats._note_live(cur_bytes)
+    consume(origins[-1], cur)
+
+    if reduce == "cols":
+        if len(reduced_outs) == 1:
+            return ctx.constrain(reduced_outs[0], out_spec)
+        # Host-side concat of the small per-panel reductions: jax 0.4.x eager
+        # concatenate on partially-replicated shardings sums the replicas
+        # (observed on 0.4.37); copying through the host is bitwise-safe.
+        out = np.concatenate([np.asarray(o) for o in reduced_outs], axis=0)
+        return jax.device_put(out, ctx.sharding(out_spec))
+    return buf

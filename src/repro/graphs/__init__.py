@@ -6,7 +6,9 @@ from repro.graphs.synthetic import (
     gmm_graph_sequence,
     gmm_points,
     gmm_snapshot_sequence,
+    gmm_store_sequence,
     similarity_graph,
+    store_snapshot_sequence,
 )
 
 __all__ = [
@@ -17,5 +19,7 @@ __all__ = [
     "gmm_graph_sequence",
     "gmm_points",
     "gmm_snapshot_sequence",
+    "gmm_store_sequence",
     "similarity_graph",
+    "store_snapshot_sequence",
 ]

@@ -302,3 +302,65 @@ def climate_snapshot_sequence(
         return gaussian_kernel_graph(ctx, f, sigma=sigma, dtype=dtype)
 
     return SnapshotSequence(t_steps=t_steps, truth=truth, components=None, _build=build)
+
+
+# ---------------------------------------------------------------------------
+# snapshot writers (out-of-core store integration)
+# ---------------------------------------------------------------------------
+
+
+def store_snapshot_sequence(store, seq: SnapshotSequence, *, ids: list[str] | None = None) -> list[str]:
+    """Write a :class:`SnapshotSequence` into a :class:`repro.store.TileStore`.
+
+    Snapshots are built (sharded) one at a time, gathered, tiled to the store
+    and dropped -- at most one snapshot is resident during the write, matching
+    the sequence engine's residency discipline.  Already-committed ids are
+    skipped, so an interrupted write resumes where it stopped.
+    """
+    ids = ids if ids is not None else [f"t{t:04d}" for t in range(seq.t_steps)]
+    if len(ids) != seq.t_steps:
+        raise ValueError(f"{len(ids)} ids for {seq.t_steps} snapshots")
+    committed = set(store.snapshot_ids)
+    for sid, a in zip(ids, seq.snapshots()):
+        if sid not in committed:
+            store.put_snapshot(sid, np.asarray(a))
+    return ids
+
+
+def gmm_store_sequence(
+    store,
+    t_steps: int,
+    *,
+    seed: int = 0,
+    noise: float = 0.05,
+    bandwidth: float = 1.0,
+) -> list[str]:
+    """Write a drifting-GMM similarity sequence *tile-by-tile* (pure numpy).
+
+    The fully out-of-core writer: only the (n, 2) point table is ever
+    resident, each ``exp(-d(i, j))`` tile is computed from the points and
+    written independently -- so store sequences far larger than host RAM can
+    be laid down (the benchmark's path to "n bounded by disk").  Same kernel
+    as :func:`similarity_graph`, no injections (no ground truth).
+    """
+    if t_steps < 1:
+        raise ValueError("need at least 1 snapshot")
+    n = store.n
+    pts, _ = gmm_points(n, seed)
+    rng = np.random.default_rng(seed)
+    ids = []
+    for t in range(t_steps):
+        sid = f"t{t:04d}"
+
+        def tile_fn(rows: np.ndarray, cols: np.ndarray) -> np.ndarray:
+            xi, xj = pts[rows], pts[cols]
+            d2 = ((xi[:, None, :] - xj[None, :, :]) ** 2).sum(-1)
+            blk = np.exp(-np.sqrt(np.maximum(d2, 1e-12)) / bandwidth).astype(np.float32)
+            blk[rows[:, None] == cols[None, :]] = 0.0
+            return blk
+
+        if sid not in store.snapshot_ids:
+            store.put_snapshot_tiles(sid, tile_fn)
+        ids.append(sid)
+        pts = pts + noise * rng.normal(size=pts.shape).astype(np.float32)
+    return ids

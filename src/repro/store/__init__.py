@@ -1,0 +1,20 @@
+"""Out-of-core snapshot store: tiled dense adjacencies on host RAM or disk.
+
+Public API re-exports.
+"""
+
+from repro.store.tilestore import (
+    MANIFEST_NAME,
+    SnapshotHandle,
+    SnapshotWriter,
+    StoreManifest,
+    TileStore,
+)
+
+__all__ = [
+    "MANIFEST_NAME",
+    "SnapshotHandle",
+    "SnapshotWriter",
+    "StoreManifest",
+    "TileStore",
+]

@@ -1,0 +1,407 @@
+"""Out-of-core graph snapshot store: dense adjacencies as grids of tiles.
+
+The paper's premise is scoring graph sequences "without the need to load the
+entire graph in memory": snapshots live on Lustre and Spark streams block
+rows through the executors.  This module is the JAX-side equivalent: a
+:class:`TileStore` keeps each n x n snapshot as a ``grid x grid`` array of
+dense tiles, backed by host RAM or by one ``.npy`` file per tile on disk,
+with a JSON manifest recording ``n``, ``grid``, ``dtype`` and the committed
+snapshot order.  Devices never see a whole snapshot: the streaming executor
+(:func:`repro.core.tiles.tile_stream`) fetches one row panel of tiles at a
+time, so HBM residency is bounded by two panels, not by n^2.
+
+Durability contract (resume after partial write): every tile is written to a
+temp file and ``os.replace``d into place (atomic on POSIX), and a snapshot id
+is appended to the manifest only by :meth:`SnapshotWriter.commit` once all
+``grid**2`` tiles exist.  Re-opening a store after a crash therefore sees only
+complete snapshots; re-running a writer skips tiles already on disk and
+commits the remainder.
+
+:class:`SnapshotHandle` is the object the core accepts wherever a resident
+``jax.Array`` adjacency is accepted (``detect_anomalies``,
+``SequenceDetector.push``, ``commute_time_embedding`` ...).  The core does not
+import this module -- it duck-types on the handle protocol
+(``shape`` / ``dtype`` / ``panel_rows`` / ``read_panel``), see
+:func:`repro.core.tiles.is_streamable`.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Iterator
+
+import numpy as np
+
+MANIFEST_NAME = "manifest.json"
+_FORMAT_VERSION = 1
+
+
+def _tile_name(r: int, c: int) -> str:
+    return f"tile_{r:04d}_{c:04d}.npy"
+
+
+@dataclass
+class StoreManifest:
+    """Static geometry of every snapshot in the store + the committed order.
+
+    ``meta`` is a caller-supplied content fingerprint (dataset name, seed,
+    generator params ...).  Re-creating a store whose geometry matches but
+    whose meta differs is rejected -- without it, a resumed write would
+    silently skip committed ids and serve stale snapshots from a previous,
+    differently-parameterized run.
+    """
+
+    n: int
+    grid: int  # tiles per side; tile shape is (n/grid, n/grid)
+    dtype: str
+    snapshots: list[str] = field(default_factory=list)
+    meta: dict = field(default_factory=dict)
+    version: int = _FORMAT_VERSION
+
+    def __post_init__(self):
+        if self.n < 1 or self.grid < 1:
+            raise ValueError(f"need n >= 1 and grid >= 1, got n={self.n} grid={self.grid}")
+        if self.n % self.grid:
+            raise ValueError(f"grid {self.grid} must divide n={self.n}")
+
+    @property
+    def tile_rows(self) -> int:
+        return self.n // self.grid
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "version": self.version,
+                "n": self.n,
+                "grid": self.grid,
+                "dtype": self.dtype,
+                "snapshots": list(self.snapshots),
+                "meta": dict(self.meta),
+            },
+            indent=2,
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "StoreManifest":
+        d = json.loads(text)
+        if d.get("version", 0) > _FORMAT_VERSION:
+            raise ValueError(f"store format v{d['version']} is newer than this reader")
+        return cls(
+            n=int(d["n"]),
+            grid=int(d["grid"]),
+            dtype=str(d["dtype"]),
+            snapshots=[str(s) for s in d.get("snapshots", [])],
+            meta=dict(d.get("meta", {})),
+            version=int(d.get("version", _FORMAT_VERSION)),
+        )
+
+
+class TileStore:
+    """A sequence of dense n x n snapshots, tiled grid x grid, RAM- or disk-backed.
+
+    Use :meth:`create` / :meth:`open` rather than the constructor::
+
+        store = TileStore.create(dir_or_none, n=1024, grid=8)
+        store.put_snapshot("t000", a)                 # tile an in-memory array
+        with store.writer("t001") as w:               # or tile-at-a-time
+            for r, c in w.missing_tiles():
+                w.put_tile(r, c, make_block(r, c))
+        for snap in store.iter_snapshots():           # SnapshotHandles, in order
+            det.push(snap)
+
+    ``root=None`` selects the host-RAM backend (same API, dict of arrays) --
+    useful for tests and for machines where host DRAM, not disk, is the
+    capacity tier.
+    """
+
+    def __init__(self, manifest: StoreManifest, root: str | Path | None):
+        self.manifest = manifest
+        self.root = Path(root) if root is not None else None
+        self._ram: dict[tuple[str, int, int], np.ndarray] = {}
+
+    # -- lifecycle -----------------------------------------------------------
+
+    @classmethod
+    def create(
+        cls,
+        root: str | Path | None,
+        *,
+        n: int,
+        grid: int,
+        dtype="float32",
+        meta: dict | None = None,
+    ) -> "TileStore":
+        """New store at ``root`` (made if missing); ``root=None`` = RAM-backed.
+
+        ``meta`` fingerprints the content (dataset, seed, params).  Resuming
+        an existing store requires matching geometry AND matching meta, so
+        committed snapshots from a differently-parameterized run can't be
+        silently served as this run's data.
+        """
+        manifest = StoreManifest(n=n, grid=grid, dtype=np.dtype(dtype).name, meta=dict(meta or {}))
+        store = cls(manifest, root)
+        if store.root is not None:
+            store.root.mkdir(parents=True, exist_ok=True)
+            existing = store.root / MANIFEST_NAME
+            if existing.exists():
+                old = StoreManifest.from_json(existing.read_text())
+                if (old.n, old.grid, old.dtype) != (n, grid, manifest.dtype):
+                    raise ValueError(
+                        f"store at {root} already exists with incompatible geometry "
+                        f"(n={old.n} grid={old.grid} dtype={old.dtype})"
+                    )
+                if meta is not None and old.meta != manifest.meta:
+                    # Adopting a meta is only safe while nothing is committed:
+                    # an unlabeled store with snapshots could be anything, and
+                    # resuming it under a fresh label would serve stale data.
+                    if old.meta or old.snapshots:
+                        raise ValueError(
+                            f"store at {root} holds different content: manifest meta "
+                            f"{old.meta or '<unlabeled, has snapshots>'} != requested "
+                            f"{manifest.meta}; use a fresh directory (or delete the "
+                            "stale store)"
+                        )
+                store.manifest = old  # resume: keep committed snapshots
+                if meta is not None and old.meta != manifest.meta:
+                    store.manifest.meta = manifest.meta
+                    store._write_manifest()
+            else:
+                store._write_manifest()
+        return store
+
+    @classmethod
+    def open(cls, root: str | Path) -> "TileStore":
+        root = Path(root)
+        manifest = StoreManifest.from_json((root / MANIFEST_NAME).read_text())
+        return cls(manifest, root)
+
+    def _write_manifest(self) -> None:
+        if self.root is None:
+            return
+        tmp = self.root / (MANIFEST_NAME + ".tmp")
+        tmp.write_text(self.manifest.to_json())
+        os.replace(tmp, self.root / MANIFEST_NAME)
+
+    # -- geometry ------------------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self.manifest.n
+
+    @property
+    def grid(self) -> int:
+        return self.manifest.grid
+
+    @property
+    def dtype(self) -> np.dtype:
+        return np.dtype(self.manifest.dtype)
+
+    @property
+    def tile_rows(self) -> int:
+        return self.manifest.tile_rows
+
+    @property
+    def snapshot_nbytes(self) -> int:
+        return self.n * self.n * self.dtype.itemsize
+
+    @property
+    def snapshot_ids(self) -> list[str]:
+        return list(self.manifest.snapshots)
+
+    def __len__(self) -> int:
+        return len(self.manifest.snapshots)
+
+    # -- tile I/O ------------------------------------------------------------
+
+    def _tile_path(self, snap_id: str, r: int, c: int) -> Path:
+        assert self.root is not None
+        return self.root / snap_id / _tile_name(r, c)
+
+    def has_tile(self, snap_id: str, r: int, c: int) -> bool:
+        if self.root is None:
+            return (snap_id, r, c) in self._ram
+        return self._tile_path(snap_id, r, c).exists()
+
+    def read_tile(self, snap_id: str, r: int, c: int, *, mmap: bool = True) -> np.ndarray:
+        """One (tile_rows, tile_rows) dense tile; disk tiles are memmapped."""
+        g = self.grid
+        if not (0 <= r < g and 0 <= c < g):
+            raise IndexError(f"tile ({r}, {c}) outside {g}x{g} grid")
+        if self.root is None:
+            return self._ram[(snap_id, r, c)]
+        path = self._tile_path(snap_id, r, c)
+        arr = np.load(path, mmap_mode="r" if mmap else None)
+        tr = self.tile_rows
+        if arr.shape != (tr, tr) or arr.dtype != self.dtype:
+            raise ValueError(
+                f"{path}: tile is {arr.shape}/{arr.dtype}, manifest says ({tr}, {tr})/{self.dtype}"
+            )
+        return arr
+
+    def _store_tile(self, snap_id: str, r: int, c: int, block: np.ndarray) -> None:
+        tr = self.tile_rows
+        block = np.ascontiguousarray(np.asarray(block, dtype=self.dtype))
+        if block.shape != (tr, tr):
+            raise ValueError(f"tile ({r}, {c}) has shape {block.shape}, want ({tr}, {tr})")
+        if self.root is None:
+            # Always copy: ascontiguousarray passes an already-contiguous
+            # caller array through, and a stored view would track later
+            # caller mutation instead of the put-time snapshot.
+            self._ram[(snap_id, r, c)] = np.array(block, copy=True)
+            return
+        path = self._tile_path(snap_id, r, c)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(".npy.tmp")
+        with open(tmp, "wb") as f:
+            np.save(f, block)
+        os.replace(tmp, path)  # atomic: a crash leaves either old or new, never torn
+
+    # -- writers -------------------------------------------------------------
+
+    def writer(self, snap_id: str) -> "SnapshotWriter":
+        if "/" in snap_id or snap_id in ("", ".", ".."):
+            raise ValueError(f"bad snapshot id {snap_id!r}")
+        return SnapshotWriter(self, snap_id)
+
+    def put_snapshot(self, snap_id: str, a) -> "SnapshotHandle":
+        """Tile an in-memory (n, n) array into the store and commit it."""
+        a = np.asarray(a)
+        if a.shape != (self.n, self.n):
+            raise ValueError(f"snapshot is {a.shape}, store holds ({self.n}, {self.n})")
+        tr = self.tile_rows
+        with self.writer(snap_id) as w:
+            for r, c in w.missing_tiles():
+                w.put_tile(r, c, a[r * tr : (r + 1) * tr, c * tr : (c + 1) * tr])
+        return self.snapshot(snap_id)
+
+    def put_snapshot_tiles(
+        self, snap_id: str, tile_fn: Callable[[np.ndarray, np.ndarray], np.ndarray]
+    ) -> "SnapshotHandle":
+        """Out-of-core write: ``tile_fn(global_rows, global_cols) -> block``.
+
+        The n x n snapshot is never materialized -- each tile is produced and
+        written independently, so arbitrarily large graphs can be laid down
+        from a (small) node-feature table.  Already-present tiles are skipped
+        (resume after a partial write).
+        """
+        tr = self.tile_rows
+        with self.writer(snap_id) as w:
+            for r, c in w.missing_tiles():
+                rows = np.arange(r * tr, (r + 1) * tr)
+                cols = np.arange(c * tr, (c + 1) * tr)
+                w.put_tile(r, c, tile_fn(rows, cols))
+        return self.snapshot(snap_id)
+
+    def _commit(self, snap_id: str) -> None:
+        if snap_id not in self.manifest.snapshots:
+            self.manifest.snapshots.append(snap_id)
+            self._write_manifest()
+
+    # -- readers -------------------------------------------------------------
+
+    def snapshot(self, snap_id: str) -> "SnapshotHandle":
+        if snap_id not in self.manifest.snapshots:
+            raise KeyError(f"snapshot {snap_id!r} not committed; have {self.manifest.snapshots}")
+        return SnapshotHandle(self, snap_id)
+
+    def iter_snapshots(self) -> Iterator["SnapshotHandle"]:
+        """Handles in committed (sequence) order -- feed to SequenceDetector.run."""
+        for sid in self.manifest.snapshots:
+            yield SnapshotHandle(self, sid)
+
+
+class SnapshotWriter:
+    """Tile-at-a-time writer with commit-on-complete (context manager).
+
+    ``missing_tiles()`` drives resumable writes: after a crash mid-snapshot,
+    re-running the same writer recomputes only the absent tiles.  ``commit()``
+    (called on clean ``with``-exit) appends the id to the manifest once every
+    tile is present, and raises if any are still missing.
+    """
+
+    def __init__(self, store: TileStore, snap_id: str):
+        self.store = store
+        self.snap_id = snap_id
+
+    def missing_tiles(self) -> list[tuple[int, int]]:
+        g = self.store.grid
+        return [
+            (r, c)
+            for r in range(g)
+            for c in range(g)
+            if not self.store.has_tile(self.snap_id, r, c)
+        ]
+
+    def put_tile(self, r: int, c: int, block: np.ndarray) -> None:
+        self.store._store_tile(self.snap_id, r, c, block)
+
+    def commit(self) -> None:
+        missing = self.missing_tiles()
+        if missing:
+            raise ValueError(
+                f"snapshot {self.snap_id!r} incomplete: {len(missing)} tiles missing "
+                f"(first: {missing[0]})"
+            )
+        self.store._commit(self.snap_id)
+
+    def __enter__(self) -> "SnapshotWriter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.commit()
+
+
+@dataclass(frozen=True)
+class SnapshotHandle:
+    """Store-backed stand-in for a resident (n, n) adjacency ``jax.Array``.
+
+    Satisfies the streaming protocol the core duck-types on
+    (:func:`repro.core.tiles.is_streamable`): ``shape``, ``dtype``,
+    ``panel_rows`` and ``read_panel``.  Panels are assembled on the host from
+    the snapshot's tile row (memmap reads), bounded by one panel of host RAM.
+    """
+
+    store: TileStore
+    snap_id: str
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.store.n, self.store.n)
+
+    @property
+    def dtype(self) -> np.dtype:
+        return self.store.dtype
+
+    @property
+    def nbytes(self) -> int:
+        return self.store.snapshot_nbytes
+
+    @property
+    def panel_rows(self) -> int:
+        """Preferred streaming unit: one tile row (full-width panel)."""
+        return self.store.tile_rows
+
+    def read_panel(self, row0: int, height: int) -> np.ndarray:
+        """The (height, n) row panel starting at global row ``row0``."""
+        tr = self.store.tile_rows
+        if row0 % tr or height % tr:
+            raise ValueError(f"panel [{row0}:{row0 + height}] not tile-aligned (tile={tr})")
+        r_lo, r_hi = row0 // tr, (row0 + height) // tr
+        g = self.store.grid
+        rows = [
+            np.concatenate(
+                [self.store.read_tile(self.snap_id, r, c) for c in range(g)], axis=1
+            )
+            if g > 1
+            else np.asarray(self.store.read_tile(self.snap_id, r, 0))
+            for r in range(r_lo, r_hi)
+        ]
+        return rows[0] if len(rows) == 1 else np.concatenate(rows, axis=0)
+
+    def to_numpy(self) -> np.ndarray:
+        """Gather the whole snapshot (tests / small graphs only)."""
+        return np.asarray(self.read_panel(0, self.store.n))

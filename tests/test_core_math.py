@@ -149,6 +149,7 @@ def test_cad_recovers_injected_anomalies(ctx1):
     assert precision >= 0.5, f"precision@20 = {precision}"
 
 
+@pytest.mark.slow
 def test_cad_sharded_matches_single(ctx1, ctx22):
     seq1 = gmm_graph_sequence(ctx1, n=64, seed=3, inject_p=0.02)
     seq2 = gmm_graph_sequence(ctx22, n=64, seed=3, inject_p=0.02)

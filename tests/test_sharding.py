@@ -29,6 +29,7 @@ def _batch(b=4, s=32):
     return {"tokens": tok, "labels": tok}
 
 
+@pytest.mark.slow
 def test_loss_invariant_to_mesh(mesh22):
     """Same params + batch -> same loss on 1x1 and 2x2 meshes."""
     spec = lm.build_spec(TINY)

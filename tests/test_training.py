@@ -70,6 +70,7 @@ def test_clip_by_global_norm():
     assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
 
 
+@pytest.mark.slow
 def test_adamw_and_adafactor_reduce_loss():
     mesh = _mesh1()
     spec = lm.build_spec(TINY)
@@ -96,6 +97,7 @@ def test_adafactor_memory_factored():
     assert st["v"]["b"]["v"].shape == (64,)
 
 
+@pytest.mark.slow
 def test_grad_accumulation_matches_full_batch():
     mesh = _mesh1()
     cfg = TINY.replace(remat=False, compute_dtype="float32")
@@ -118,6 +120,7 @@ def test_grad_accumulation_matches_full_batch():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_restart_recovers_exactly(tmp_path):
     """Crash at step 4 (after the step-3 checkpoint), restart, finish.
 
@@ -161,6 +164,7 @@ def test_restart_recovers_exactly(tmp_path):
     np.testing.assert_allclose(straight[3:], resumed, rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 def test_elastic_remesh_restore(tmp_path):
     """Checkpoint on a 2x2 mesh, restore onto 1x1 -- loss trajectory equal."""
     cfg = TINY.replace(compute_dtype="float32")
