@@ -1,0 +1,140 @@
+"""Out-of-core chain build: streamed (store-backed S/T/P) vs resident, and
+the max-n-under-budget table for the chain working set.
+
+The chain product is the O(n^3) hot spot AND (after the PR-2 snapshot store
+removed the adjacency term) the remaining HBM bound: a resident build holds
+~5 n^2 fp32 matrices (S, T, P, P1, P2).  The out-of-core build spills them
+through a TileStore scratch and keeps only O(n * panel) on device; this
+benchmark measures both paths, verifies the scores stay allclose, and emits
+the max n that fits a given device budget for each mode as JSON.
+
+  PYTHONPATH=src python benchmarks/bench_oochain.py --n 256 --d 4 \
+      --budget-mb 1.0 --out benchmarks/bench_oochain.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core import (
+    CommuteConfig,
+    chain_product,
+    detect_anomalies,
+    reset_stream_stats,
+    stream_stats,
+    trivial_context,
+)
+from repro.store import TileStore
+
+
+def _sym(n: int, seed: int) -> np.ndarray:
+    a = np.abs(np.random.default_rng(seed).normal(size=(n, n))).astype(np.float32)
+    a = (a + a.T) / 2.0
+    np.fill_diagonal(a, 0.0)
+    return a
+
+
+def run(n=256, d=4, q=4, grid=None, budget_mb=1.0, out_path=None, out=print):
+    ctx = trivial_context()
+    budget = int(budget_mb * 1e6)
+    a1, a2 = _sym(n, 0), _sym(n, 1)
+    store = TileStore.create(None, n=n, grid=grid or 8)
+    h1, h2 = store.put_snapshot("t0", a1), store.put_snapshot("t1", a2)
+    work = TileStore.create(None, n=n, grid=grid or 8)
+    ph = store.tile_rows
+    cfg = CommuteConfig(eps_rp=1e-2, d=d, q=q, schedule="xla")
+    cfg_oo = CommuteConfig(eps_rp=1e-2, d=d, q=q, schedule="xla", oocore=True)
+
+    # -- resident chain build (warm both once for compile parity) ------------
+    chain_product(ctx, ctx.put_matrix(a1), d, schedule="xla")
+    t0 = time.perf_counter()
+    op_r = chain_product(ctx, ctx.put_matrix(a1), d, schedule="xla")
+    jax.block_until_ready(op_r.p2)
+    resident_s = time.perf_counter() - t0
+    resident_peak = 5 * n * n * 4  # S, T, P, P1, P2 fp32
+
+    # -- out-of-core chain build --------------------------------------------
+    chain_product(ctx, h1, d, schedule="xla", oocore=True,
+                  oocore_work=work, oocore_panel_rows=ph)
+    reset_stream_stats()
+    t0 = time.perf_counter()
+    op_o = chain_product(ctx, h1, d, schedule="xla", oocore=True,
+                         oocore_work=work, oocore_panel_rows=ph)
+    oocore_s = time.perf_counter() - t0
+    st = stream_stats()
+
+    np.testing.assert_allclose(op_o.p2.to_numpy(), np.asarray(op_r.p2),
+                               rtol=1e-3, atol=1e-3)
+    res_r = detect_anomalies(ctx, ctx.put_matrix(a1), ctx.put_matrix(a2), cfg, top_k=10)
+    res_o = detect_anomalies(ctx, h1, h2, cfg_oo, top_k=10)
+    close = bool(np.allclose(np.asarray(res_o.scores), np.asarray(res_r.scores),
+                             rtol=1e-4, atol=1e-3))
+
+    out(f"[bench_oochain] n={n} d={d} panel={ph} rows "
+        f"({n * n * 4 / 1e6:.2f} MB/matrix, resident chain set "
+        f"{resident_peak / 1e6:.2f} MB)")
+    out(f"[bench_oochain] resident build: {resident_s:.2f}s, "
+        f"peak chain residency {resident_peak / 1e6:.2f} MB "
+        f"-> {'WITHIN' if resident_peak <= budget else 'OVER'} "
+        f"{budget / 1e6:.2f} MB budget")
+    out(f"[bench_oochain] oocore build:   {oocore_s:.2f}s, "
+        f"peak device panel residency {st.peak_live_bytes / 1e6:.2f} MB "
+        f"({st.panels} panels, {st.bytes_h2d / 1e6:.1f} MB H2D) "
+        f"-> {'WITHIN' if st.peak_live_bytes <= budget else 'OVER'} budget")
+    out(f"[bench_oochain] end-to-end scores allclose: {close}")
+
+    # -- max n within the device budget, per mode ----------------------------
+    # resident: 5 n^2 * 4 bytes.  oocore with a g x g scratch grid: one
+    # accumulator panel + one streamed panel + one block ~= 3 * (n/g) * n * 4.
+    n_res = int(math.isqrt(budget // 20))
+    table = []
+    for g in (4, 8, 16, 32):
+        n_oo = int(math.isqrt(budget * g // 12))
+        table.append({"grid": g, "max_n_oocore": n_oo})
+        out(f"[bench_oochain] budget {budget / 1e6:.2f} MB: max n resident ~{n_res}, "
+            f"oocore grid={g} ~{n_oo} ({n_oo / max(n_res, 1):.1f}x)")
+
+    result = {
+        "bench": "oochain",
+        "n": n, "d": d, "q": q, "panel_rows": ph,
+        "budget_mb": budget / 1e6,
+        "resident_s": resident_s,
+        "oocore_s": oocore_s,
+        "resident_peak_mb": resident_peak / 1e6,
+        "oocore_peak_mb": st.peak_live_bytes / 1e6,
+        "oocore_panels": st.panels,
+        "oocore_h2d_mb": st.bytes_h2d / 1e6,
+        "resident_within_budget": resident_peak <= budget,
+        "oocore_within_budget": st.peak_live_bytes <= budget,
+        "scores_allclose": close,
+        "max_n_resident": n_res,
+        "max_n_oocore": table,
+    }
+    if out_path:
+        Path(out_path).write_text(json.dumps(result, indent=2))
+        out(f"[bench_oochain] wrote {out_path}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--d", type=int, default=4)
+    ap.add_argument("--q", type=int, default=4)
+    ap.add_argument("--grid", type=int, default=None, help="store/scratch tiles per side")
+    ap.add_argument("--budget-mb", type=float, default=1.0)
+    ap.add_argument("--out", default=None, help="write results JSON here")
+    args = ap.parse_args()
+    run(n=args.n, d=args.d, q=args.q, grid=args.grid, budget_mb=args.budget_mb,
+        out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -30,9 +30,13 @@ from repro.core.embedding import (
 from repro.core.sequence import SequenceDetector, SequenceResult, detect_sequence_anomalies
 from repro.core.solver import estimate_solution, residual_norm
 from repro.core.tiles import (
+    ProgramCacheStats,
     StreamStats,
     Tile,
+    clear_program_cache,
     is_streamable,
+    program_cache_stats,
+    reset_program_cache_stats,
     reset_stream_stats,
     stream_stats,
     tile_map,
@@ -43,6 +47,10 @@ __all__ = [
     "CADResult",
     "ChainOperator",
     "CommuteConfig",
+    "ProgramCacheStats",
+    "clear_program_cache",
+    "program_cache_stats",
+    "reset_program_cache_stats",
     "DistContext",
     "Embedding",
     "SCHEDULES",

@@ -25,6 +25,28 @@ from repro.core.embedding import CommuteConfig, Embedding, commute_time_embeddin
 from repro.core.tiles import is_streamable, tile_map, tile_stream
 
 
+def _cad_scores_body(tile, b1, b2, z1, z2, v1, v2):
+    def dist(z, vol):
+        zi = z[tile.rows].astype(jnp.float32)
+        zj = z[tile.cols].astype(jnp.float32)
+        sq_i = jnp.sum(zi * zi, -1)
+        sq_j = jnp.sum(zj * zj, -1)
+        return vol * (sq_i[:, None] + sq_j[None, :] - 2.0 * (zi @ zj.T))
+
+    de = jnp.abs(b1.astype(jnp.float32) - b2.astype(jnp.float32)) * jnp.abs(
+        dist(z1, v1) - dist(z2, v2)
+    )
+    return de.sum(axis=1)
+
+
+def _cad_scores_kernel_body(tile, b1, b2, z1, z2, v1, v2):
+    from repro.kernels import ops as kops
+
+    return kops.cad_scores_tile(
+        b1, b2, z1[tile.rows], z1[tile.cols], z2[tile.rows], z2[tile.cols], v1, v2
+    )
+
+
 def node_anomaly_scores(
     ctx: DistContext,
     a1: jax.Array,
@@ -45,34 +67,13 @@ def node_anomaly_scores(
     and the same tile body runs off-core, bitwise identical to the resident
     run.  Only the (n, k_RP) embeddings stay device-resident.
     """
-
-    def tile_fn(tile, b1, b2, z1, z2, v1, v2):
-        if use_kernel:
-            from repro.kernels import ops as kops
-
-            return kops.cad_scores_tile(
-                b1, b2, z1[tile.rows], z1[tile.cols], z2[tile.rows], z2[tile.cols], v1, v2
-            )
-
-        def dist(z, vol):
-            zi = z[tile.rows].astype(jnp.float32)
-            zj = z[tile.cols].astype(jnp.float32)
-            sq_i = jnp.sum(zi * zi, -1)
-            sq_j = jnp.sum(zj * zj, -1)
-            return vol * (sq_i[:, None] + sq_j[None, :] - 2.0 * (zi @ zj.T))
-
-        de = jnp.abs(b1.astype(jnp.float32) - b2.astype(jnp.float32)) * jnp.abs(
-            dist(z1, v1) - dist(z2, v2)
-        )
-        return de.sum(axis=1)
-
     # Z is (n, k_RP) -- small; replicate it for tile-local access to rows+cols.
     z1 = ctx.constrain(e1.z, P(None, None))
     z2 = ctx.constrain(e2.z, P(None, None))
     runner = tile_stream if is_streamable(a1) or is_streamable(a2) else tile_map
     return runner(
         ctx,
-        tile_fn,
+        _cad_scores_kernel_body if use_kernel else _cad_scores_body,
         a1,
         a2,
         z1,
@@ -118,4 +119,9 @@ def detect_anomalies(
     e2 = commute_time_embedding(ctx, a2, cfg, use_kernel=use_kernel)
     scores = node_anomaly_scores(ctx, a1, a2, e1, e2, use_kernel=use_kernel)
     idx, vals = top_anomalies(scores, top_k)
+    # The operators die with this call: retire any out-of-core scratch they
+    # hold, so a pairwise loop over a disk scratch dir stays bounded.
+    for e in (e1, e2):
+        if e.op is not None:
+            e.op.release_scratch()
     return CADResult(scores=scores, top_idx=idx, top_val=vals)

@@ -25,9 +25,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from jax.sharding import PartitionSpec as P
+
 from repro.core import laplacian as lap
-from repro.core.distmatrix import DistContext, add_scaled_identity, blockwise_unary, matmul
-from repro.core.tiles import is_streamable, stream_stats
+from repro.core.distmatrix import DistContext, add_scaled_identity, matmul
+from repro.core.tiles import is_streamable, sharded_zeros, stream_stats, tile_map
 
 # Build counter: chain_product is the O(n^3) hot spot, so the sequence engine
 # (and its tests) track exactly how many times it runs.
@@ -47,10 +49,16 @@ def reset_chain_build_count() -> None:
 @jax.tree_util.register_pytree_node_class
 @dataclass
 class ChainOperator:
-    """Precomputed pieces so every Richardson iteration is mat-vec only."""
+    """Precomputed pieces so every Richardson iteration is mat-vec only.
 
-    p1: jax.Array  # (n, n)  Z^ = D^{-1/2} P D^{-1/2}
-    p2: jax.Array  # (n, n)  Z^ @ L
+    ``p1`` / ``p2`` are resident sharded arrays, or store-backed snapshot
+    handles when the operator was built out-of-core
+    (:func:`repro.core.oochain.chain_product_oocore`) -- the solver streams
+    handle-backed operators per panel.
+    """
+
+    p1: jax.Array  # (n, n)  Z^ = D^{-1/2} P D^{-1/2}  (array or store handle)
+    p2: jax.Array  # (n, n)  Z^ @ L                    (array or store handle)
     deg: jax.Array  # (n,)
     vol: jax.Array  # scalar V_G
 
@@ -60,6 +68,23 @@ class ChainOperator:
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children)
+
+    def release_scratch(self) -> None:
+        """Retire store-backed P1 / P2 from their scratch store (no-op for
+        resident operators).  Call once the operator will not be used again;
+        every consumer that builds oocore operators internally
+        (``detect_anomalies``, ``SequenceDetector``) does this itself."""
+        for buf in (self.p1, self.p2):
+            store = getattr(buf, "store", None)
+            if store is not None and hasattr(buf, "snap_id"):
+                try:
+                    store.remove_snapshot(buf.snap_id)
+                except Exception:
+                    pass
+
+
+def _col_scale_body(tile, blk, v):
+    return blk.astype(jnp.float32) * v[tile.cols][None, :]
 
 
 def _matmul_panels_from_store(ctx: DistContext, m: jax.Array, h, out_dtype) -> jax.Array:
@@ -75,7 +100,7 @@ def _matmul_panels_from_store(ctx: DistContext, m: jax.Array, h, out_dtype) -> j
     ph = int(np.lcm(int(h.panel_rows), ctx.n_row_shards))
     sharding = ctx.sharding(ctx.matrix_spec)
     st = stream_stats()
-    acc = jax.device_put(jnp.zeros((n, n), jnp.float32), sharding)
+    acc = sharded_zeros((n, n), jnp.float32, sharding)
     for r0 in range(0, n, ph):
         panel = jax.device_put(np.ascontiguousarray(h.read_panel(r0, ph)), sharding)
         st.panels += 1
@@ -99,6 +124,9 @@ def chain_product(
     deflate: bool = True,
     fuse_l: bool = False,
     use_kernel: bool = False,
+    oocore: bool = False,
+    oocore_work=None,
+    oocore_panel_rows: int | None = None,
 ) -> ChainOperator:
     """Build the chain operator from ``a``: a resident sharded adjacency or a
     store-backed snapshot handle.
@@ -112,11 +140,34 @@ def chain_product(
     one (all A-consuming passes are elementwise or row-parallel); the opt-in
     ``fuse_l=True`` path instead accumulates Z^ @ A per panel, whose reduction
     order differs from the resident single GEMM -- allclose, not bitwise.
+
+    ``oocore=True`` removes the remaining n^2 device term: the squaring chain
+    itself runs against store-backed working matrices
+    (:func:`repro.core.oochain.chain_product_oocore`), spilling S / T / P
+    through ``oocore_work`` (a TileStore, a directory, or None for host-RAM
+    scratch) so peak device residency is O(n * panel); the returned operator
+    holds store-backed P1 / P2 that the solver streams.  Allclose, not
+    bitwise, vs the resident build.  ``schedule`` / ``use_kernel`` / ``dtype``
+    govern the resident GEMMs only and are ignored out-of-core (the scratch
+    and operator are always fp32).
     """
     if d_len < 1:
         raise ValueError("chain length d must be >= 1")
     global _BUILD_COUNT
     _BUILD_COUNT += 1
+    if oocore:
+        from repro.core.oochain import chain_product_oocore
+
+        return chain_product_oocore(
+            ctx,
+            a,
+            d_len,
+            dtype=dtype,
+            deflate=deflate,
+            fuse_l=fuse_l,
+            work=oocore_work,
+            panel_rows=oocore_panel_rows,
+        )
     mm = partial(matmul, ctx, schedule=schedule, out_dtype=dtype, use_kernel=use_kernel)
 
     deg = lap.degrees(ctx, a)
@@ -130,16 +181,18 @@ def chain_product(
         p = jnp.add(mm(p, t), p)  # P (I + T) = P T + P, no identity materialized
 
     inv_sqrt = jnp.where(deg > 0, jax.lax.rsqrt(jnp.maximum(deg, 1e-30)), 0.0)
-    p1 = blockwise_unary(
+    p1 = tile_map(
         ctx,
-        lambda blk, r, c: blk.astype(jnp.float32) * inv_sqrt[r][:, None] * inv_sqrt[c][None, :],
+        lap._sym_scale_body,
         p,
+        inv_sqrt,
+        in_specs=(ctx.matrix_spec, P(None)),
         out_dtype=dtype,
     )
     if fuse_l:
         # P2 = Z^ (D - A) = (Z^ col-scaled by d) - Z^ @ A
-        p1d = blockwise_unary(
-            ctx, lambda blk, r, c: blk.astype(jnp.float32) * deg[c][None, :], p1, out_dtype=dtype
+        p1d = tile_map(
+            ctx, _col_scale_body, p1, deg, in_specs=(ctx.matrix_spec, P(None)), out_dtype=dtype
         )
         if is_streamable(a):
             p2 = jnp.subtract(p1d, _matmul_panels_from_store(ctx, p1, a, dtype))

@@ -39,7 +39,15 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.tiles import is_streamable, pcast_varying, shard_map, tile_map, tile_stream
+from repro.core.tiles import (
+    cached_program,
+    is_streamable,
+    pcast_varying,
+    program_cache_stats,
+    shard_map,
+    tile_map,
+    tile_stream,
+)
 
 SCHEDULES = ("xla", "summa", "cannon")
 
@@ -123,21 +131,27 @@ def _matmul_xla(ctx: DistContext, a, b, out_dtype):
 
 
 def _matmul_summa(ctx: DistContext, a, b, out_dtype, use_kernel=False):
-    row_ax, col_ax = ctx.row_axes, ctx.col_axes
+    def build():
+        row_ax, col_ax = ctx.row_axes, ctx.col_axes
 
-    def local(a_blk, b_blk):
-        # Row panel of A (gather along column axis), column panel of B.
-        a_panel = lax.all_gather(a_blk, col_ax, axis=1, tiled=True)
-        b_panel = lax.all_gather(b_blk, row_ax, axis=0, tiled=True)
-        return _local_dot(a_panel, b_panel, use_kernel).astype(out_dtype)
+        def local(a_blk, b_blk):
+            program_cache_stats().traces += 1
+            # Row panel of A (gather along column axis), column panel of B.
+            a_panel = lax.all_gather(a_blk, col_ax, axis=1, tiled=True)
+            b_panel = lax.all_gather(b_blk, row_ax, axis=0, tiled=True)
+            return _local_dot(a_panel, b_panel, use_kernel).astype(out_dtype)
 
-    fn = shard_map(
-        local,
-        mesh=ctx.mesh,
-        in_specs=(ctx.matrix_spec, ctx.matrix_spec),
-        out_specs=ctx.matrix_spec,
-    )
-    return fn(a, b)
+        return jax.jit(
+            shard_map(
+                local,
+                mesh=ctx.mesh,
+                in_specs=(ctx.matrix_spec, ctx.matrix_spec),
+                out_specs=ctx.matrix_spec,
+            )
+        )
+
+    key = ("summa", ctx, np.dtype(out_dtype).name, use_kernel)
+    return cached_program(key, build)(a, b)
 
 
 def _cannon_perms(R: int, C: int):
@@ -156,35 +170,41 @@ def _matmul_cannon(ctx: DistContext, a, b, out_dtype, use_kernel=False):
             f"cannon schedule needs a square device grid, got {R}x{C}; "
             "use schedule='summa' (or make the pod axis an outer sequence axis)"
         )
-    axes = ctx.row_axes + ctx.col_axes
-    skew_a, skew_b, shift_a, shift_b = _cannon_perms(R, C)
+    def build():
+        axes = ctx.row_axes + ctx.col_axes
+        skew_a, skew_b, shift_a, shift_b = _cannon_perms(R, C)
 
-    def local(a_blk, b_blk):
-        a_blk = lax.ppermute(a_blk, axes, skew_a)
-        b_blk = lax.ppermute(b_blk, axes, skew_b)
-        # pcast-to-varying: the accumulator must carry the same
-        # (data, model)-varying type as the per-step GEMM output.
-        acc0 = pcast_varying(jnp.zeros((a_blk.shape[0], b_blk.shape[1]), jnp.float32), axes)
+        def local(a_blk, b_blk):
+            program_cache_stats().traces += 1
+            a_blk = lax.ppermute(a_blk, axes, skew_a)
+            b_blk = lax.ppermute(b_blk, axes, skew_b)
+            # pcast-to-varying: the accumulator must carry the same
+            # (data, model)-varying type as the per-step GEMM output.
+            acc0 = pcast_varying(jnp.zeros((a_blk.shape[0], b_blk.shape[1]), jnp.float32), axes)
 
-        def body(_, carry):
-            acc, a_cur, b_cur = carry
-            # Issue next-step permutes first: independent of the GEMM below, so
-            # the latency-hiding scheduler overlaps ICI transfer with the MXU.
-            a_nxt = lax.ppermute(a_cur, axes, shift_a)
-            b_nxt = lax.ppermute(b_cur, axes, shift_b)
-            acc = acc + _local_dot(a_cur, b_cur, use_kernel)
-            return acc, a_nxt, b_nxt
+            def body(_, carry):
+                acc, a_cur, b_cur = carry
+                # Issue next-step permutes first: independent of the GEMM below, so
+                # the latency-hiding scheduler overlaps ICI transfer with the MXU.
+                a_nxt = lax.ppermute(a_cur, axes, shift_a)
+                b_nxt = lax.ppermute(b_cur, axes, shift_b)
+                acc = acc + _local_dot(a_cur, b_cur, use_kernel)
+                return acc, a_nxt, b_nxt
 
-        acc, _, _ = lax.fori_loop(0, R, body, (acc0, a_blk, b_blk))
-        return acc.astype(out_dtype)
+            acc, _, _ = lax.fori_loop(0, R, body, (acc0, a_blk, b_blk))
+            return acc.astype(out_dtype)
 
-    fn = shard_map(
-        local,
-        mesh=ctx.mesh,
-        in_specs=(ctx.matrix_spec, ctx.matrix_spec),
-        out_specs=ctx.matrix_spec,
-    )
-    return fn(a, b)
+        return jax.jit(
+            shard_map(
+                local,
+                mesh=ctx.mesh,
+                in_specs=(ctx.matrix_spec, ctx.matrix_spec),
+                out_specs=ctx.matrix_spec,
+            )
+        )
+
+    key = ("cannon", ctx, np.dtype(out_dtype).name, use_kernel)
+    return cached_program(key, build)(a, b)
 
 
 def matmul(
@@ -207,12 +227,37 @@ def matmul(
     raise ValueError(f"unknown schedule {schedule!r}; want one of {SCHEDULES}")
 
 
+def _rowblock_body(tile, blk, x):
+    return jnp.dot(
+        blk.astype(jnp.float32),
+        x[tile.cols].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
 def matmul_rowblock(ctx: DistContext, m: jax.Array, x: jax.Array) -> jax.Array:
     """(n x n) @ (n x k) with k << n: the Richardson mat-vec workhorse.
 
     m is matrix-sharded; x is row-sharded and tiny, so XLA's reduce-scatter /
     all-gather pair on the k-columns is cheap.  Always accumulates fp32.
+
+    ``m`` may also be a store-backed snapshot handle (an out-of-core chain's
+    P1 / P2): the mat-vec then streams row panels of m against the small
+    replicated x, so the operator matrix is never device-resident -- the
+    solver inherits the panel residency bound of the chain build.
     """
+    if is_streamable(m):
+        xr = ctx.constrain(x, P(None, None))
+        out = tile_stream(
+            ctx,
+            _rowblock_body,
+            m,
+            xr,
+            in_specs=(ctx.matrix_spec, P(None, None)),
+            reduce="cols",
+            out_spec=ctx.rowblock_spec,
+        )
+        return ctx.constrain(out.astype(x.dtype), ctx.rowblock_spec)
     out = jnp.dot(m, x.astype(jnp.float32), preferred_element_type=jnp.float32)
     return ctx.constrain(out.astype(x.dtype), ctx.rowblock_spec)
 
@@ -272,9 +317,17 @@ def blockwise_unary(
     return tile_map(ctx, body, x, out_dtype=out_dtype)
 
 
+def _add_scaled_identity_body(tile, blk, s):
+    return blk + s * tile.diag_mask().astype(blk.dtype)
+
+
 def add_scaled_identity(ctx: DistContext, x: jax.Array, scale=1.0) -> jax.Array:
-    """x + scale * I without materializing I (used for P <- P @ T + P etc.)."""
+    """x + scale * I without materializing I (used for P <- P @ T + P etc.).
+
+    The scale rides along as a scalar operand (not a closure constant) so the
+    tile program is compiled once per mesh/geometry, not once per call.
+    Resident operands only: every caller applies this to an already-resident
+    chain matrix (the out-of-core chain has its own panel program).
+    """
     s = jnp.asarray(scale, x.dtype)
-    return blockwise_unary(
-        ctx, lambda blk, r, c: blk + s * (r[:, None] == c[None, :]).astype(blk.dtype), x
-    )
+    return tile_map(ctx, _add_scaled_identity_body, x, s, in_specs=(ctx.matrix_spec, P()))

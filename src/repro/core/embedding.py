@@ -18,6 +18,7 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import rng as crng
@@ -40,11 +41,29 @@ class CommuteConfig:
     deflate: bool = True
     fuse_l: bool = False
     k_override: int | None = None  # force embedding dim (tests/ablations)
+    # Out-of-core chain: spill S/T/P/P1/P2 through a TileStore scratch so the
+    # chain build (and the solver, via store-backed P1/P2) is panel-bounded.
+    oocore: bool = False
+    oocore_dir: str | None = None  # scratch dir; None = host-RAM scratch
+    oocore_panel_rows: int | None = None  # override the streaming unit
 
     def k_rp(self, n: int) -> int:
         if self.k_override is not None:
             return int(self.k_override)
         return max(1, math.ceil(math.log(n / self.eps_rp)))
+
+
+def _edge_projection_body(tile, blk, seed, ks):
+    s = jnp.sqrt(jnp.maximum(blk.astype(jnp.float32), 0.0))
+    q = crng.edge_rademacher(
+        seed,
+        tile.rows[:, None, None],
+        tile.cols[None, :, None],
+        ks[None, None, :],
+    )
+    # sum (not einsum): reduces each column over axis 1 in the same order
+    # as the sequential per-column pass, keeping the output bit-identical.
+    return jnp.sum(s[:, :, None] * q, axis=1)
 
 
 def edge_projection(ctx: DistContext, a: jax.Array, seed: int, k: int) -> jax.Array:
@@ -59,26 +78,21 @@ def edge_projection(ctx: DistContext, a: jax.Array, seed: int, k: int) -> jax.Ar
     sees one fused multiply-reduce instead of k dependent passes (this is the
     layout the Pallas kernel in :mod:`repro.kernels.edge_projection` uses).
     ``a`` may be a store-backed snapshot handle; the projection then streams
-    row panels (one pass over A either way).
+    row panels (one pass over A either way).  The seed and the column counter
+    enter as uint32 operands (same hash bits as the former literals), keeping
+    the body a cache-stable module-level program.
     """
-
-    def tile_fn(tile, blk):
-        s = jnp.sqrt(jnp.maximum(blk.astype(jnp.float32), 0.0))
-        q = crng.edge_rademacher(
-            seed,
-            tile.rows[:, None, None],
-            tile.cols[None, :, None],
-            jnp.arange(k, dtype=jnp.uint32)[None, None, :],
-        )
-        # sum (not einsum): reduces each column over axis 1 in the same order
-        # as the sequential per-column pass, keeping the output bit-identical.
-        return jnp.sum(s[:, :, None] * q, axis=1)
-
-    kwargs = dict(reduce="cols", out_spec=P(ctx.row_axes, None))
+    seed_arr = jnp.asarray(np.uint32(int(seed) & 0xFFFFFFFF))
+    ks = jnp.arange(k, dtype=jnp.uint32)
+    kwargs = dict(
+        in_specs=(ctx.matrix_spec, P(), P(None)),
+        reduce="cols",
+        out_spec=P(ctx.row_axes, None),
+    )
     if is_streamable(a):
-        y = tile_stream(ctx, tile_fn, a, **kwargs)
+        y = tile_stream(ctx, _edge_projection_body, a, seed_arr, ks, **kwargs)
     else:
-        y = tile_map(ctx, tile_fn, a, **kwargs)
+        y = tile_map(ctx, _edge_projection_body, a, seed_arr, ks, **kwargs)
     return y * (1.0 / jnp.sqrt(jnp.float32(k)))
 
 
@@ -115,6 +129,9 @@ def commute_time_embedding(
             deflate=cfg.deflate,
             fuse_l=cfg.fuse_l,
             use_kernel=use_kernel,
+            oocore=cfg.oocore,
+            oocore_work=cfg.oocore_dir,
+            oocore_panel_rows=cfg.oocore_panel_rows,
         )
     y = edge_projection(ctx, a, cfg.seed, k)
     z = estimate_solution(ctx, op, y, cfg.q, deflate=cfg.deflate)

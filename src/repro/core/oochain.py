@@ -1,0 +1,295 @@
+"""Out-of-core Peng-Spielman chain product: the squaring chain against
+store-backed working matrices.
+
+The resident :func:`repro.core.chain.chain_product` keeps S, T, P, P1, P2 as
+n x n device-resident arrays -- five n^2 buffers, the HBM bound on n once the
+raw adjacency itself is streamed (the PR-2 snapshot store).  This module runs
+the same recurrence
+
+    T <- T @ T          P <- P @ T + P
+
+entirely against a :class:`repro.store.TileStore`-backed scratch: every GEMM
+is a walk over output row panels, each computed as a panel-accumulated sum
+
+    C[I, :] = init[I, :] + sign * sum_K  L[I, K] @ R[K, :]
+
+with L[I, K] sliced on the host from the left operand's row panel and R[K, :]
+streamed host -> device one panel at a time.  Peak device residency per GEMM
+is one accumulator panel + one streamed panel + one (panel x panel) block --
+O(n * panel), never O(n^2).  The unary passes (S build, +I, the D^{-1/2}
+sandwich, the Laplacian) stream one panel at a time through jitted
+module-level panel programs: the row origin is a traced operand, so each
+program compiles once per geometry and serves every panel of every snapshot.
+
+Numerics: per-panel accumulation orders the GEMM reductions differently from
+the resident single dot, so an out-of-core chain is *allclose* (fp32
+accumulation throughout), not bitwise, vs the resident build -- the same
+contract as the streamed ``fuse_l`` path, and the blockwise-solve tolerance
+argument of Khoa & Chawla (arXiv:1111.4541) for approximate commute-time
+embeddings.  Working matrices are stored fp32 regardless of the chain dtype.
+
+The returned :class:`~repro.core.chain.ChainOperator` carries *store-backed*
+P1 / P2 handles; :func:`repro.core.distmatrix.matmul_rowblock` and the
+Richardson solver stream them per panel, so the whole pipeline -- ingest,
+chain build, solve, scoring -- is panel-bounded end-to-end.  All panel
+traffic is accounted in :func:`repro.core.tiles.stream_stats`.
+"""
+
+from __future__ import annotations
+
+import uuid
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import laplacian as lap
+from repro.core.chain import ChainOperator
+from repro.core.distmatrix import DistContext
+from repro.core.tiles import _PanelSource, is_streamable, sharded_zeros, stream_stats
+
+# ---------------------------------------------------------------------------
+# panel programs (module-level jit: compiled once per geometry, the row
+# origin is traced so one program serves every panel)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _s_panel_deflated(blk, r0, inv_sqrt, deg, vol):
+    ph = blk.shape[0]
+    isr = lax.dynamic_slice(inv_sqrt, (r0,), (ph,))
+    s = blk.astype(jnp.float32) * isr[:, None] * inv_sqrt[None, :]
+    dr = lax.dynamic_slice(deg, (r0,), (ph,))
+    u_r = jnp.sqrt(jnp.maximum(dr, 0.0) / vol)
+    u_c = jnp.sqrt(jnp.maximum(deg, 0.0) / vol)
+    return s - u_r[:, None] * u_c[None, :]
+
+
+@jax.jit
+def _s_panel_plain(blk, r0, inv_sqrt):
+    ph = blk.shape[0]
+    isr = lax.dynamic_slice(inv_sqrt, (r0,), (ph,))
+    return blk.astype(jnp.float32) * isr[:, None] * inv_sqrt[None, :]
+
+
+@jax.jit
+def _plus_eye_panel(blk, r0):
+    ph, n = blk.shape
+    rows = r0 + jnp.arange(ph)
+    cols = jnp.arange(n)
+    return blk + (rows[:, None] == cols[None, :]).astype(blk.dtype)
+
+
+@jax.jit
+def _l_panel(blk, r0, deg):
+    ph, n = blk.shape
+    rows = r0 + jnp.arange(ph)
+    eye = (rows[:, None] == jnp.arange(n)[None, :]).astype(jnp.float32)
+    dr = lax.dynamic_slice(deg, (r0,), (ph,))
+    return eye * dr[:, None] - blk.astype(jnp.float32)
+
+
+@jax.jit
+def _col_scale_panel(blk, v):
+    return blk.astype(jnp.float32) * v[None, :]
+
+
+@jax.jit
+def _gemm_step(acc, block, right):
+    """acc + block @ right, fp32 accumulate (one K-term of a panel GEMM)."""
+    return acc + jnp.dot(
+        block.astype(jnp.float32), right.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@jax.jit
+def _gemm_step_neg(acc, block, right):
+    return acc - jnp.dot(
+        block.astype(jnp.float32), right.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# host-side panel plumbing
+# ---------------------------------------------------------------------------
+
+
+def _reader(x) -> _PanelSource:
+    """Row-panel fetcher (shared with tile_stream; see tiles._PanelSource)."""
+    return _PanelSource(x, streamed=is_streamable(x))
+
+
+def _host_panel(src: _PanelSource, r0: int, height: int) -> np.ndarray:
+    """One (height, n) row panel on the host (D2H for resident operands)."""
+    return np.asarray(src.fetch(r0, height))
+
+
+def _auto_grid(n: int, quantum: int) -> int:
+    """Default working-store grid: panels of >= 32 rows, >= 2 per side.
+
+    Finer grids bound residency tighter but pay per-panel dispatch and tile
+    I/O on every GEMM step; 32-row panels keep the inner GEMM MXU-shaped.
+    Small n falls back to the finest quantum-aligned grid.
+    """
+    for g in (8, 4, 2):
+        if n % g == 0 and (n // g) % quantum == 0 and n // g >= 32:
+            return g
+    for g in (16, 8, 4, 2, 1):
+        if n % g == 0 and (n // g) % quantum == 0:
+            return g
+    raise ValueError(f"n={n} is not divisible by the panel quantum {quantum}")
+
+
+# ---------------------------------------------------------------------------
+# the out-of-core chain build
+# ---------------------------------------------------------------------------
+
+
+def chain_product_oocore(
+    ctx: DistContext,
+    a,
+    d_len: int,
+    *,
+    dtype=jnp.float32,
+    deflate: bool = True,
+    fuse_l: bool = False,
+    work=None,
+    panel_rows: int | None = None,
+) -> ChainOperator:
+    """Build the chain operator with store-backed working matrices.
+
+    ``a`` is a resident sharded adjacency or a store-backed snapshot handle
+    (handles keep even the input off-core).  ``work`` is the scratch
+    :class:`~repro.store.TileStore` -- a store instance, a directory path, or
+    ``None`` for a host-RAM-backed scratch (device residency is bounded
+    either way; the directory form additionally bounds host RAM).
+    ``panel_rows`` overrides the streaming unit.
+
+    Every snapshot id in the scratch is prefixed with a fresh nonce, so one
+    scratch store (or directory) can serve many builds -- including resumed
+    processes -- without id collisions; intermediates are removed as soon as
+    the recurrence no longer needs them, and only P1 / P2 survive the build
+    (retired via ``ChainOperator.release_scratch`` by ``detect_anomalies``
+    and by ``SequenceDetector`` as the operator leaves the two-snapshot
+    window).  ``dtype`` is accepted for signature parity but ignored: the
+    scratch and the returned operator are always fp32.
+    """
+    from repro.store import TileStore  # deferred: core->store only on this path
+
+    if d_len < 1:
+        raise ValueError("chain length d must be >= 1")
+    n = int(a.shape[0])
+    R, C = ctx.n_row_shards, ctx.n_col_shards
+    src_quantum = int(a.panel_rows) if is_streamable(a) else 1
+    quantum = int(np.lcm.reduce(np.asarray([R, C, src_quantum], np.int64)))
+    if work is None:
+        work = TileStore.create(None, n=n, grid=_auto_grid(n, quantum))
+    elif isinstance(work, (str, Path)):
+        work = TileStore.create(work, n=n, grid=_auto_grid(n, quantum))
+    if work.n != n:
+        raise ValueError(f"working store holds n={work.n}, adjacency is n={n}")
+    ph = int(panel_rows or np.lcm(work.tile_rows, quantum))
+    if n % ph or ph % work.tile_rows or ph % quantum:
+        raise ValueError(
+            f"panel_rows={ph} must divide n={n} and align to store tiles "
+            f"({work.tile_rows}) and the mesh/source quantum ({quantum})"
+        )
+    tag = f"w{uuid.uuid4().hex[:8]}."
+
+    st = stream_stats()
+    st.calls += 1
+    sharding = ctx.sharding(ctx.matrix_spec)
+    rep = ctx.sharding(P(None))
+
+    deg = lap.degrees(ctx, a)
+    vol = lap.volume(ctx, deg)
+    deg_r = jax.device_put(deg, rep)
+    inv_sqrt_r = jnp.where(deg_r > 0, lax.rsqrt(jnp.maximum(deg_r, 1e-30)), 0.0)
+
+    def put_panel(host: np.ndarray):
+        dev = jax.device_put(np.ascontiguousarray(host), sharding)
+        st.panels += 1
+        st.bytes_h2d += dev.nbytes
+        return dev
+
+    def unary_pass(out_id: str, reader: _PanelSource, fn, *args):
+        """Stream panels through a jitted panel program into the store."""
+        with work.writer(out_id) as w:
+            for r0 in range(0, n, ph):
+                blk = put_panel(_host_panel(reader, r0, ph))
+                out = fn(blk, jnp.int32(r0), *args)
+                st._note_live(blk.nbytes + out.nbytes)
+                w.put_row_panel(r0, np.asarray(out))
+        return work.snapshot(out_id)
+
+    def oo_gemm(out_id: str, left_h, right_h, *, init: str = "zero", sign: float = 1.0,
+                col_scale=None):
+        """C[I, :] = init_I + sign * sum_K left[I, K] @ right[K, :] into the store.
+
+        ``init``: "zero", "left" (C = left + ...; the P @ T + P fusion) or
+        "left_colscale" (C = left * col_scale - ...; the fuse_l P2 build).
+        The left row panel stays on the host; only its (ph, ph) K-blocks, the
+        streamed right panels and the accumulator are ever device-resident.
+        """
+        lread, rread = _reader(left_h), _reader(right_h)
+        step = _gemm_step if sign > 0 else _gemm_step_neg
+        with work.writer(out_id) as w:
+            for r0 in range(0, n, ph):
+                left_host = _host_panel(lread, r0, ph)
+                if init == "left":
+                    acc = put_panel(left_host).astype(jnp.float32)
+                elif init == "left_colscale":
+                    acc = _col_scale_panel(put_panel(left_host), col_scale)
+                else:
+                    acc = sharded_zeros((ph, n), jnp.float32, sharding)
+                for k0 in range(0, n, ph):
+                    block = put_panel(left_host[:, k0 : k0 + ph])
+                    right = put_panel(_host_panel(rread, k0, ph))
+                    acc = step(acc, block, right)
+                    st._note_live(acc.nbytes + block.nbytes + right.nbytes)
+                w.put_row_panel(r0, np.asarray(acc))
+        return work.snapshot(out_id)
+
+    # S (= T at level 0) and P0 = I + S, in one pass over A.  Level ids use a
+    # "lvl" infix so they can never collide with the final P1 / P2 outputs.
+    reader_a = _reader(a)
+    s_id, p_id = tag + "Tlvl0", tag + "Plvl0"
+    with work.writer(s_id) as ws, work.writer(p_id) as wp:
+        for r0 in range(0, n, ph):
+            blk = put_panel(_host_panel(reader_a, r0, ph))
+            if deflate:
+                s_blk = _s_panel_deflated(blk, jnp.int32(r0), inv_sqrt_r, deg_r, vol)
+            else:
+                s_blk = _s_panel_plain(blk, jnp.int32(r0), inv_sqrt_r)
+            p_blk = _plus_eye_panel(s_blk, jnp.int32(r0))
+            st._note_live(blk.nbytes + s_blk.nbytes + p_blk.nbytes)
+            ws.put_row_panel(r0, np.asarray(s_blk))
+            wp.put_row_panel(r0, np.asarray(p_blk))
+    t_h, p_h = work.snapshot(s_id), work.snapshot(p_id)
+
+    # The squaring chain, every operand store-backed.
+    for lvl in range(1, d_len):
+        t_new = oo_gemm(f"{tag}Tlvl{lvl}", t_h, t_h)
+        p_new = oo_gemm(f"{tag}Plvl{lvl}", p_h, t_new, init="left")
+        work.remove_snapshot(t_h.snap_id)
+        work.remove_snapshot(p_h.snap_id)
+        t_h, p_h = t_new, p_new
+
+    # the P1 sandwich is the same row/col scaling as the undeflated S build
+    p1_h = unary_pass(tag + "P1", _reader(p_h), _s_panel_plain, inv_sqrt_r)
+    if fuse_l:
+        p2_h = oo_gemm(tag + "P2", p1_h, a, init="left_colscale", sign=-1.0,
+                       col_scale=deg_r)
+    else:
+        l_h = unary_pass(tag + "L", reader_a, _l_panel, deg_r)
+        p2_h = oo_gemm(tag + "P2", p1_h, l_h)
+        work.remove_snapshot(l_h.snap_id)
+    work.remove_snapshot(t_h.snap_id)
+    work.remove_snapshot(p_h.snap_id)
+
+    return ChainOperator(p1=p1_h, p2=p2_h, deg=deg, vol=vol)

@@ -109,13 +109,26 @@ class SequenceDetector:
     # -- snapshot lifecycle --------------------------------------------------
 
     def _release(self, a: jax.Array, emb: Embedding) -> None:
-        """Drop (and with donate=True, eagerly free) an outgoing snapshot."""
+        """Retire an outgoing snapshot as it leaves the two-snapshot window.
+
+        An out-of-core chain operator's P1 / P2 handles live in a scratch
+        store owned by the build; those snapshots are ALWAYS removed here
+        (resident operators are freed by refcount either way -- without this,
+        a disk-backed scratch would grow by 2 n^2 bytes per snapshot for the
+        whole sequence).  The input snapshot ``a`` may also be a store-backed
+        handle -- that is the *user's* data and is never removed from its
+        store.  ``donate=True`` additionally deletes the outgoing *device*
+        buffers eagerly (double buffering); callers must not touch a donated
+        snapshot again.
+        """
+        if emb.op is not None:
+            emb.op.release_scratch()
         if not self.donate:
             return
         for buf in (a, emb.z, *(() if emb.op is None else (emb.op.p1, emb.op.p2))):
             try:
                 buf.delete()
-            except Exception:  # already deleted / not deletable (tracers)
+            except Exception:  # already deleted / handle / not deletable
                 pass
 
     def push(self, a) -> CADResult | None:

@@ -21,6 +21,7 @@ from jax import lax
 
 from repro.core.chain import ChainOperator
 from repro.core.distmatrix import DistContext, matmul_rowblock
+from repro.core.tiles import is_streamable
 
 
 def deflate_constant(ctx: DistContext, y: jax.Array) -> jax.Array:
@@ -51,6 +52,17 @@ def estimate_solution(
     chi = matmul_rowblock(ctx, op.p1, b)
     if deflate:
         chi = deflate_constant(ctx, chi)
+
+    if is_streamable(op.p1) or is_streamable(op.p2):
+        # Out-of-core operator: the mat-vec streams store panels on the host,
+        # so the iteration must stay a Python loop (a traced lax.scan body
+        # cannot fetch panels).  q is small; each step re-streams P2 once.
+        y = chi
+        for _ in range(q_iters - 1):
+            y = y - matmul_rowblock(ctx, op.p2, y) + chi
+            if deflate:
+                y = deflate_constant(ctx, y)
+        return y
 
     def body(y, _):
         y = y - matmul_rowblock(ctx, op.p2, y) + chi

@@ -31,6 +31,7 @@ This module also owns the version-compat shims for the manual-sharding API
 
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any, Callable, Sequence
 
@@ -96,6 +97,98 @@ else:  # old jax with check_rep=False: varying types are not tracked at all
 
 
 # ---------------------------------------------------------------------------
+# tile-program compile cache
+# ---------------------------------------------------------------------------
+#
+# jax.jit keys its C++ dispatch cache on the *callable's identity*, and both
+# executors historically wrapped a fresh closure per invocation -- so a
+# T-snapshot sequence run retraced (and recompiled) the same ~5 tile programs
+# T times.  The cache below keys the jitted program on everything the closure
+# actually depends on: the body function object, the mesh/axes context, the
+# static panel geometry, the partition specs, the reduction and the output
+# dtype.  Bodies that want cache hits must therefore be *module-level
+# functions taking all data as operands* (a per-call lambda, or a closure over
+# arrays, gets a fresh identity and safely misses).
+
+
+@dataclass
+class ProgramCacheStats:
+    """Process-wide compile-cache accounting (see :func:`program_cache_stats`).
+
+    ``traces`` counts Python executions of tile-program bodies -- a body runs
+    in Python only while jax traces it, so a steady-state snapshot push that
+    adds zero traces provably reused every compiled tile program.
+    """
+
+    hits: int = 0  # cache hits: program reused, no retrace
+    misses: int = 0  # cache misses: a new program was built (and traced)
+    traces: int = 0  # Python trace executions of tile-program bodies
+
+
+_PROGRAM_STATS = ProgramCacheStats()
+_PROGRAM_CACHE: OrderedDict = OrderedDict()
+_PROGRAM_CACHE_MAX = 512  # per-call lambdas miss forever; bound their footprint
+
+
+def program_cache_stats() -> ProgramCacheStats:
+    """Counters since process start / last :func:`reset_program_cache_stats`."""
+    return _PROGRAM_STATS
+
+
+def reset_program_cache_stats() -> ProgramCacheStats:
+    global _PROGRAM_STATS
+    _PROGRAM_STATS = ProgramCacheStats()
+    return _PROGRAM_STATS
+
+
+def clear_program_cache() -> None:
+    _PROGRAM_CACHE.clear()
+
+
+def cached_program(key: tuple, build: Callable[[], Callable]) -> Callable:
+    """The jitted program for ``key``, building (and tracing) it on first use.
+
+    The caller owns the key contract: it must cover every value the built
+    closure captures.  Keys holding per-call function objects pin them in the
+    cache; eviction is LRU once the cache exceeds its bound, so a long run's
+    churn of never-hit per-call lambdas (e.g. ``build_from_nodes`` closures,
+    one per generated snapshot) can't evict the hot, constantly-hitting
+    chain/scorer programs.
+    """
+    prog = _PROGRAM_CACHE.get(key)
+    if prog is None:
+        while len(_PROGRAM_CACHE) >= _PROGRAM_CACHE_MAX:
+            _PROGRAM_CACHE.popitem(last=False)  # least recently used
+        _PROGRAM_STATS.misses += 1
+        prog = build()
+        _PROGRAM_CACHE[key] = prog
+    else:
+        _PROGRAM_STATS.hits += 1
+        _PROGRAM_CACHE.move_to_end(key)
+    return prog
+
+
+def _dtype_key(dt) -> str | None:
+    return None if dt is None else np.dtype(dt).name
+
+
+def sharded_zeros(shape: tuple[int, ...], dtype, sharding) -> jax.Array:
+    """A zero buffer born with ``sharding`` (jitted with out_shardings).
+
+    Eager ``jnp.zeros`` materializes the whole array on the default device
+    before any reshard -- at out-of-core scale that single-device allocation
+    OOMs exactly the buffers (streaming assembly targets, GEMM accumulators)
+    whose residency the executors are bounding.  The jitted program allocates
+    each shard on its own device; programs are cached per (shape, dtype,
+    sharding).
+    """
+    return cached_program(
+        ("zeros", tuple(shape), _dtype_key(dtype), sharding),
+        lambda: jax.jit(lambda: jnp.zeros(shape, dtype), out_shardings=sharding),
+    )()
+
+
+# ---------------------------------------------------------------------------
 # the tile-program primitive
 # ---------------------------------------------------------------------------
 
@@ -150,6 +243,7 @@ def _tile_local(
     mesh_axes = tuple(ctx.row_axes) + tuple(ctx.col_axes)
 
     def local(*args):
+        _PROGRAM_STATS.traces += 1  # body runs in Python only while tracing
         if with_origin:
             origin, *blocks = args
         else:
@@ -228,8 +322,6 @@ def tile_map(
         raise ValueError(f"reduce must be None, 'cols' or 'rows', got {reduce!r}")
     reduce_axes = {"cols": ctx.col_axes, "rows": ctx.row_axes, None: None}[reduce]
 
-    local = _tile_local(ctx, fn, pr, pc, reduce_axes, out_dtype)
-
     if out_spec is None:
         if reduce == "cols":
             out_spec = ctx.vector_spec
@@ -241,9 +333,20 @@ def tile_map(
     # jit for numeric parity with tile_stream: both executors compile their
     # tile program through the same pipeline, so a streamed run is bitwise
     # identical to the resident run (XLA fuses jit and eager-dispatch
-    # programs slightly differently).
-    mapped = jax.jit(
-        shard_map(local, mesh=ctx.mesh, in_specs=in_specs, out_specs=out_spec)
+    # programs slightly differently).  The program is cached on everything the
+    # closure depends on, so repeated calls with the same body reuse one
+    # compiled program instead of retracing per call.
+    key = ("tile_map", fn, ctx, pr, pc, in_specs, out_spec, reduce, _dtype_key(out_dtype))
+    mapped = cached_program(
+        key,
+        lambda: jax.jit(
+            shard_map(
+                _tile_local(ctx, fn, pr, pc, reduce_axes, out_dtype),
+                mesh=ctx.mesh,
+                in_specs=in_specs,
+                out_specs=out_spec,
+            )
+        ),
     )
     return mapped(*operands)
 
@@ -395,25 +498,34 @@ def tile_stream(
             sources.append(None)  # per-call constant (replicated table, scalar)
 
     reduce_axes = ctx.col_axes if reduce == "cols" else None
-    local = _tile_local(ctx, fn, pr, pc, reduce_axes, out_dtype, with_origin=True)
 
     panel_in_specs = []
     for spec, src in zip(in_specs, sources):
         panel_in_specs.append(ctx.matrix_spec if src is not None else spec)
+    panel_in_specs = tuple(panel_in_specs)
     if out_spec is None:
         out_spec = ctx.vector_spec if reduce == "cols" else ctx.matrix_spec
     panel_out_spec = out_spec
 
     # jit so panels after the first hit the compile cache (eager shard_map
     # retraces per call; one compiled program serves the whole panel walk
-    # because the row origin is a traced operand, not a constant).
-    mapped = jax.jit(
-        shard_map(
-            local,
-            mesh=ctx.mesh,
-            in_specs=(P(), *panel_in_specs),
-            out_specs=panel_out_spec,
-        )
+    # because the row origin is a traced operand, not a constant), and cache
+    # the program itself so later tile_stream calls with the same body don't
+    # retrace either.
+    key = (
+        "tile_stream", fn, ctx, pr, pc, panel_in_specs, panel_out_spec, reduce,
+        _dtype_key(out_dtype),
+    )
+    mapped = cached_program(
+        key,
+        lambda: jax.jit(
+            shard_map(
+                _tile_local(ctx, fn, pr, pc, reduce_axes, out_dtype, with_origin=True),
+                mesh=ctx.mesh,
+                in_specs=(P(), *panel_in_specs),
+                out_specs=panel_out_spec,
+            )
+        ),
     )
 
     stats = _STREAM_STATS
@@ -452,10 +564,13 @@ def tile_stream(
     # in-flight panels are ever live -- never all panels at once.
     out_sharding = ctx.sharding(out_spec)
     donate = (0,) if jax.default_backend() != "cpu" else ()
-    update = jax.jit(
-        lambda buf, blk, r0: lax.dynamic_update_slice(buf, blk, (r0, jnp.int32(0))),
-        donate_argnums=donate,
-        out_shardings=out_sharding,
+    update = cached_program(
+        ("stream_update", out_sharding, donate),
+        lambda: jax.jit(
+            lambda buf, blk, r0: lax.dynamic_update_slice(buf, blk, (r0, jnp.int32(0))),
+            donate_argnums=donate,
+            out_shardings=out_sharding,
+        ),
     )
     reduced_outs: list[jax.Array] = []
     buf = None
@@ -467,7 +582,7 @@ def tile_stream(
             reduced_outs.append(out)
         else:
             if buf is None:
-                buf = jax.device_put(jnp.zeros((n0, n1), out.dtype), out_sharding)
+                buf = sharded_zeros((n0, n1), out.dtype, out_sharding)
             buf = update(buf, out, jnp.int32(row0))
 
     origins = list(range(0, n0, panel_rows))

@@ -37,6 +37,19 @@ def _named(mesh, specs):
     )
 
 
+def _serve_rules(spec: lm.LMSpec, mesh: Mesh, rules=None):
+    rules = rules or (cm.multipod_rules() if "pod" in mesh.axis_names else cm.DEFAULT_RULES)
+    return cm.arch_rules(spec.cfg, rules)
+
+
+def _token_sharding(spec: lm.LMSpec, mesh: Mesh, batch: int, rules=None) -> NamedSharding:
+    """The decode step's declared token sharding (see make_serve_step)."""
+    rules = cm.attach_axis_sizes(_serve_rules(spec, mesh, rules), mesh)
+    return NamedSharding(
+        mesh, cm.sanitize_spec(cm.logical_to_spec(("batch",), rules), (batch,), mesh)
+    )
+
+
 def make_serve_step(
     spec: lm.LMSpec,
     mesh: Mesh,
@@ -53,8 +66,7 @@ def make_serve_step(
     Cache specs are divisibility-sanitized against the mesh; the KV sequence
     shards over "model" (flash-decode).
     """
-    rules = rules or (cm.multipod_rules() if "pod" in mesh.axis_names else cm.DEFAULT_RULES)
-    rules = cm.arch_rules(spec.cfg, rules)
+    rules = _serve_rules(spec, mesh, rules)
     # decode moves tokens (KBs), never expert weights (GBs/layer):
     # and keeps ALL weights resident: experts 2-axis (model x data), dense
     # layers TP over "model" and replicated over "data" (no optimizer states
@@ -90,9 +102,7 @@ def make_serve_step(
 
 
 def make_prefill(spec: lm.LMSpec, mesh: Mesh, s_max: int, *, rules=None):
-    rules = rules or (cm.multipod_rules() if "pod" in mesh.axis_names else cm.DEFAULT_RULES)
-    rules = cm.arch_rules(spec.cfg, rules)
-    rules = cm.attach_axis_sizes(rules, mesh)
+    rules = cm.attach_axis_sizes(_serve_rules(spec, mesh, rules), mesh)
     pshape = jax.eval_shape(lambda k: lm.init_params(spec, k), jax.random.PRNGKey(0))
     pspecs = cm.sanitize_specs(lm.param_specs(spec, rules), pshape, mesh)
 
@@ -113,6 +123,11 @@ class ServeEngine:
             spec, mesh, batch=batch or 1, s_max=s_max, donate_cache=True
         )
         self.prefill, _ = make_prefill(spec, mesh, s_max)
+        # The decode step declares a (possibly data-sharded) token in_sharding;
+        # sampled tokens come off an eager argmax/categorical as *replicated*
+        # arrays, which pjit rejects on multi-device meshes (equivalent only on
+        # 1x1).  Re-lay every sampled token out explicitly before decode.
+        self._tok_sharding = _token_sharding(spec, mesh, batch or 1)
 
     def generate(self, prompts: np.ndarray, frames: np.ndarray | None = None) -> np.ndarray:
         """prompts (B, S_prompt) int32 -> generated tokens (B, max_new)."""
@@ -133,5 +148,9 @@ class ServeEngine:
 
     def _sample(self, logits, key):
         if self.cfg.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(key, logits / self.cfg.temperature, axis=-1).astype(jnp.int32)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            tok = jax.random.categorical(
+                key, logits / self.cfg.temperature, axis=-1
+            ).astype(jnp.int32)
+        return jax.device_put(tok, self._tok_sharding)

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import json
 import os
+import shutil
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Callable, Iterator
@@ -185,6 +186,21 @@ class TileStore:
         tmp.write_text(self.manifest.to_json())
         os.replace(tmp, self.root / MANIFEST_NAME)
 
+    def _refresh_manifest(self) -> None:
+        """Re-read the on-disk snapshot list before a manifest mutation.
+
+        Several TileStore instances may share one directory over time (e.g.
+        each out-of-core chain build opens the scratch dir anew while earlier
+        builds' operators are still live); mutations must read-modify-write
+        the current file state or a stale instance would clobber snapshots
+        committed after it opened.
+        """
+        if self.root is None:
+            return
+        path = self.root / MANIFEST_NAME
+        if path.exists():
+            self.manifest.snapshots = StoreManifest.from_json(path.read_text()).snapshots
+
     # -- geometry ------------------------------------------------------------
 
     @property
@@ -296,9 +312,35 @@ class TileStore:
         return self.snapshot(snap_id)
 
     def _commit(self, snap_id: str) -> None:
+        self._refresh_manifest()
         if snap_id not in self.manifest.snapshots:
             self.manifest.snapshots.append(snap_id)
             self._write_manifest()
+
+    def remove_snapshot(self, snap_id: str) -> None:
+        """Drop a snapshot's tiles (and its manifest entry, if committed).
+
+        This is how out-of-core *working* matrices (the chain's S / T / P
+        intermediates) are retired as soon as the recurrence no longer needs
+        them, bounding scratch capacity by the live working set.  Removing an
+        uncommitted (partially written) snapshot is allowed and cleans up its
+        tiles.  The manifest entry goes first, the tiles second: a crash in
+        between leaves only harmless orphan tiles, never a committed id whose
+        tiles are gone (the "committed == complete" invariant).
+        """
+        if "/" in snap_id or snap_id in ("", ".", ".."):
+            raise ValueError(f"bad snapshot id {snap_id!r}")
+        self._refresh_manifest()
+        if snap_id in self.manifest.snapshots:
+            self.manifest.snapshots.remove(snap_id)
+            self._write_manifest()
+        if self.root is None:
+            for key in [k for k in self._ram if k[0] == snap_id]:
+                del self._ram[key]
+        else:
+            snap_dir = self.root / snap_id
+            if snap_dir.exists():
+                shutil.rmtree(snap_dir)
 
     # -- readers -------------------------------------------------------------
 
@@ -337,6 +379,29 @@ class SnapshotWriter:
 
     def put_tile(self, r: int, c: int, block: np.ndarray) -> None:
         self.store._store_tile(self.snap_id, r, c, block)
+
+    def put_row_panel(self, row0: int, panel: np.ndarray) -> None:
+        """Write a full-width (height, n) row panel as its constituent tiles.
+
+        The streaming producers (out-of-core chain GEMMs, panel transforms)
+        emit full-width row panels; this slices them back into the store's
+        tile grid.  ``row0`` and the panel height must be tile-aligned.
+        """
+        tr = self.store.tile_rows
+        n = self.store.n
+        panel = np.asarray(panel)
+        if panel.ndim != 2 or panel.shape[1] != n:
+            raise ValueError(f"row panel must be (height, {n}), got {panel.shape}")
+        if row0 % tr or panel.shape[0] % tr:
+            raise ValueError(
+                f"panel [{row0}:{row0 + panel.shape[0]}] not tile-aligned (tile={tr})"
+            )
+        r_lo = row0 // tr
+        for i in range(panel.shape[0] // tr):
+            for c in range(self.store.grid):
+                self.put_tile(
+                    r_lo + i, c, panel[i * tr : (i + 1) * tr, c * tr : (c + 1) * tr]
+                )
 
     def commit(self) -> None:
         missing = self.missing_tiles()

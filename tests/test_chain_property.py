@@ -1,0 +1,103 @@
+"""Chain-invariant property tests: the telescoping identity
+
+    (I - S) @ P == I - S^{2^d}
+
+(the defining property of the Peng-Spielman product, see chain.py's
+docstring) must hold for every way we build the chain -- resident,
+streamed-adjacency, and out-of-core -- on 1x1 and 2x2 meshes.  The operator
+returns P1 = D^{-1/2} P D^{-1/2}, so P is reconstructed by undoing the
+sandwich against an independent numpy model of S.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import CommuteConfig, chain_product
+from repro.store import TileStore
+
+DS = [1, 2, 3, 4]
+
+
+def _sym(n: int, seed: int) -> np.ndarray:
+    a = np.abs(np.random.default_rng(seed).normal(size=(n, n))).astype(np.float32)
+    a = (a + a.T) / 2.0
+    np.fill_diagonal(a, 0.0)
+    return a
+
+
+def _numpy_s(a: np.ndarray, deflate: bool) -> np.ndarray:
+    """Independent float64 model of the (deflated) normalized adjacency."""
+    a = a.astype(np.float64)
+    deg = a.sum(1)
+    inv_sqrt = np.where(deg > 0, 1.0 / np.sqrt(np.maximum(deg, 1e-30)), 0.0)
+    s = a * inv_sqrt[:, None] * inv_sqrt[None, :]
+    if deflate:
+        u = np.sqrt(np.maximum(deg, 0.0) / deg.sum())
+        s = s - np.outer(u, u)
+    return s
+
+
+def _reconstruct_p(op) -> np.ndarray:
+    """P = D^{1/2} P1 D^{1/2} (undo the operator's sandwich)."""
+    p1 = op.p1.to_numpy() if hasattr(op.p1, "to_numpy") else np.asarray(op.p1)
+    sq = np.sqrt(np.asarray(op.deg, dtype=np.float64))
+    return sq[:, None] * p1.astype(np.float64) * sq[None, :]
+
+
+def _check_telescoping(ctx, a: np.ndarray, d: int, mode: str) -> None:
+    n = a.shape[0]
+    if mode == "resident":
+        operand, kwargs = ctx.put_matrix(a), {}
+    else:
+        store = TileStore.create(None, n=n, grid=4)
+        operand = store.put_snapshot("t0", a)
+        kwargs = {"oocore": True} if mode == "oocore" else {}
+    op = chain_product(ctx, operand, d, schedule="xla", **kwargs)
+
+    s = _numpy_s(a, deflate=True)
+    p = _reconstruct_p(op)
+    lhs = (np.eye(n) - s) @ p
+    rhs = np.eye(n) - np.linalg.matrix_power(s, 2**d)
+    # fp32 chain vs float64 model: error grows with the 2(d-1) GEMM depth.
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=5e-3)
+
+
+@pytest.fixture(params=["ctx1", "ctx22"])
+def ctx(request):
+    return request.getfixturevalue(request.param)
+
+
+@pytest.mark.parametrize("d", DS)
+@pytest.mark.parametrize("mode", ["resident", "streamed", "oocore"])
+def test_telescoping_identity(ctx, d, mode):
+    _check_telescoping(ctx, _sym(32, 40 + d), d, mode)
+
+
+def test_telescoping_identity_undeflated(ctx1):
+    """Same identity without deflation (the paper-faithful fp64-style S)."""
+    n, d = 32, 3
+    a = _sym(n, 50)
+    op = chain_product(ctx1, ctx1.put_matrix(a), d, schedule="xla", deflate=False)
+    s = _numpy_s(a, deflate=False)
+    lhs = (np.eye(n) - s) @ _reconstruct_p(op)
+    rhs = np.eye(n) - np.linalg.matrix_power(s, 2**d)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=5e-3)
+
+
+try:
+    import hypothesis  # noqa: F401
+
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @given(seed=st.integers(0, 2**16), d=st.integers(1, 3))
+    @settings(max_examples=10, deadline=None)
+    def test_telescoping_identity_random(seed, d):
+        """Hypothesis sweep over graphs/depths (1x1 mesh, resident build)."""
+        from repro.core import trivial_context
+
+        _check_telescoping(trivial_context(), _sym(16, seed), d, "resident")

@@ -1,0 +1,114 @@
+"""Retrace budget: the tile-program compile cache pays each compile once.
+
+Guards the "a T-snapshot run retraces the same ~5 programs T times"
+regression (ROADMAP) forever: tile bodies execute in Python only while jax
+traces them, so ``program_cache_stats().traces`` is an exact count of tile
+program (re)traces, and a steady-state snapshot push must add zero.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CommuteConfig,
+    SequenceDetector,
+    detect_anomalies,
+    program_cache_stats,
+)
+from repro.core.tiles import tile_map
+
+CFG = CommuteConfig(eps_rp=1e-2, d=3, q=3, schedule="xla", k_override=4)
+
+
+def _sym(n: int, seed: int) -> np.ndarray:
+    a = np.abs(np.random.default_rng(seed).normal(size=(n, n))).astype(np.float32)
+    a = (a + a.T) / 2.0
+    np.fill_diagonal(a, 0.0)
+    return a
+
+
+def test_tile_map_traces_body_once(ctx1):
+    """Trace-counting body: repeated tile_map calls with the same body and
+    geometry reuse one compiled program (the body's Python code runs once)."""
+    traces = []
+
+    def body(tile, blk):
+        traces.append(1)
+        return blk
+
+    x = ctx1.put_matrix(np.zeros((16, 16), np.float32))
+    tile_map(ctx1, body, x)
+    tile_map(ctx1, body, x)
+    tile_map(ctx1, body, x)
+    assert len(traces) == 1
+
+    # a different geometry is a different program: exactly one more trace
+    y = ctx1.put_matrix(np.zeros((32, 32), np.float32))
+    tile_map(ctx1, body, y)
+    assert len(traces) == 2
+
+
+def test_fresh_lambda_misses_safely(ctx1):
+    """Per-call lambdas (which may close over data) never false-hit."""
+    x = ctx1.put_matrix(np.full((16, 16), 2.0, np.float32))
+    outs = []
+    for scale in (1.0, 3.0):
+        outs.append(np.asarray(tile_map(ctx1, lambda tile, blk: blk * scale, x)))
+    np.testing.assert_allclose(outs[0], 2.0)
+    np.testing.assert_allclose(outs[1], 6.0)
+
+
+@pytest.mark.parametrize("schedule", ["xla", "cannon"])
+def test_second_transition_zero_new_compiles(ctx1, schedule):
+    """Acceptance: the second snapshot pair compiles nothing new."""
+    cfg = CommuteConfig(eps_rp=1e-2, d=3, q=3, schedule=schedule, k_override=4)
+    n = 32
+    detect_anomalies(ctx1, ctx1.put_matrix(_sym(n, 0)), ctx1.put_matrix(_sym(n, 1)), cfg)
+    st = program_cache_stats()
+    t0, m0 = st.traces, st.misses
+    detect_anomalies(ctx1, ctx1.put_matrix(_sym(n, 2)), ctx1.put_matrix(_sym(n, 3)), cfg)
+    assert st.traces == t0, "second transition retraced a tile program"
+    assert st.misses == m0, "second transition missed the program cache"
+
+
+def test_sequence_retrace_budget(ctx1):
+    """4-snapshot SequenceDetector run: every tile program compiles exactly
+    once.  Snapshot 1 compiles the chain/embedding programs, snapshot 2 adds
+    only the (first-use) scorer programs; snapshots 3 and 4 add zero."""
+    snaps = [_sym(32, 10 + t) for t in range(4)]
+    det = SequenceDetector(ctx1, CFG, top_k=5)
+    st = program_cache_stats()
+    det.push(ctx1.put_matrix(snaps[0]))
+    after_first = st.traces
+    det.push(ctx1.put_matrix(snaps[1]))  # first transition: scorer compiles
+    warm_traces, warm_misses = st.traces, st.misses
+    det.push(ctx1.put_matrix(snaps[2]))
+    det.push(ctx1.put_matrix(snaps[3]))
+    res = det.finalize()
+    assert len(res.transitions) == 3
+    assert st.traces == warm_traces, "steady-state push retraced a tile program"
+    assert st.misses == warm_misses, "steady-state push missed the program cache"
+    assert st.hits > 0
+    assert after_first > 0  # sanity: the cold build did trace programs
+
+
+def test_streamed_sequence_retrace_budget(ctx1):
+    """The retrace budget holds out-of-core too: store-backed snapshots and
+    the oocore chain reuse one compiled program set across the sequence."""
+    from repro.store import TileStore
+
+    n = 32
+    cfg = CommuteConfig(eps_rp=1e-2, d=3, q=3, schedule="xla", k_override=4, oocore=True)
+    store = TileStore.create(None, n=n, grid=4)
+    for t in range(4):
+        store.put_snapshot(f"t{t}", _sym(n, 20 + t))
+    det = SequenceDetector(ctx1, cfg, top_k=5)
+    it = store.iter_snapshots()
+    det.push(next(it))
+    det.push(next(it))
+    st = program_cache_stats()
+    warm_traces, warm_misses = st.traces, st.misses
+    det.push(next(it))
+    det.push(next(it))
+    assert st.traces == warm_traces
+    assert st.misses == warm_misses

@@ -217,6 +217,84 @@ def test_streamed_fuse_l_close_and_counted(ctx1):
     assert stream_stats().panels >= 9 * 4
 
 
+# ---------------------------------------------------------------------------
+# out-of-core chain: allclose scores, panel-bounded residency
+# ---------------------------------------------------------------------------
+
+
+def test_oocore_chain_scores_allclose(ctx, tmp_path):
+    """chain_product(oocore=True) end-to-end: scores allclose (rtol<=1e-4) to
+    the resident build on 1x1 and 2x2 meshes, adjacency AND chain streamed."""
+    n = 32
+    a1, a2 = _sym(n, 40), _sym(n, 41)
+    store = TileStore.create(tmp_path / "s", n=n, grid=4)
+    h1, h2 = store.put_snapshot("t0", a1), store.put_snapshot("t1", a2)
+    cfg_oo = CommuteConfig(
+        eps_rp=1e-2, d=3, q=3, schedule="xla", k_override=4, oocore=True
+    )
+
+    res_r = detect_anomalies(ctx, ctx.put_matrix(a1), ctx.put_matrix(a2), CFG, top_k=5)
+    res_o = detect_anomalies(ctx, h1, h2, cfg_oo, top_k=5)
+    np.testing.assert_allclose(
+        np.asarray(res_o.scores), np.asarray(res_r.scores), rtol=1e-4, atol=1e-3
+    )
+
+    # resident-adjacency input with an out-of-core chain also works
+    res_m = detect_anomalies(ctx, ctx.put_matrix(a1), ctx.put_matrix(a2), cfg_oo, top_k=5)
+    np.testing.assert_allclose(
+        np.asarray(res_m.scores), np.asarray(res_r.scores), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_oocore_chain_residency_bounded_by_panels(ctx1):
+    """During an out-of-core chain build, peak live panel bytes stay under
+    2 * panel * n * 4 bytes per GEMM operand (left, right, accumulator) --
+    bounded by panels, not by the 5 * n^2 resident working set."""
+    from repro.core import chain_product
+
+    n, grid = 64, 8
+    store = TileStore.create(None, n=n, grid=grid)
+    h = store.put_snapshot("t0", _sym(n, 42))
+    work = TileStore.create(None, n=n, grid=grid)
+    ph = n // grid
+
+    reset_stream_stats()
+    op = chain_product(
+        ctx1, h, 3, schedule="xla", oocore=True, oocore_work=work, oocore_panel_rows=ph
+    )
+    st = stream_stats()
+    panel_bytes = ph * n * 4
+    assert st.panels > 0
+    assert st.peak_live_bytes <= 3 * 2 * panel_bytes  # 2 panels per GEMM operand
+    assert st.peak_live_bytes < 5 * n * n * 4  # and far under the resident set
+    # the operator itself is store-backed: the solver streams it
+    assert hasattr(op.p1, "read_panel") and hasattr(op.p2, "read_panel")
+    # intermediates were retired: only P1 and P2 survive in the scratch
+    assert len(work.snapshot_ids) == 2
+
+
+def test_oocore_chain_sequence_retires_scratch(ctx1, tmp_path):
+    """Outgoing operators' scratch snapshots are retired as the two-snapshot
+    window advances -- with or without donate -- so a disk scratch stays
+    bounded by the window, not the sequence length.  The user's input store
+    is never touched."""
+    n = 32
+    scratch = tmp_path / "scratch"
+    cfg_oo = CommuteConfig(
+        eps_rp=1e-2, d=3, q=3, schedule="xla", k_override=4,
+        oocore=True, oocore_dir=str(scratch),
+    )
+    store = TileStore.create(None, n=n, grid=4)
+    for t in range(4):
+        store.put_snapshot(f"t{t}", _sym(n, 50 + t))
+    det = SequenceDetector(ctx1, cfg_oo, top_k=5)  # donate=False
+    res = det.run(store.iter_snapshots())
+    assert len(res.transitions) == 3
+    assert store.snapshot_ids == ["t0", "t1", "t2", "t3"]  # user data untouched
+    # only the still-live window's operator (last snapshot: P1 + P2) remains
+    assert len(TileStore.open(scratch).snapshot_ids) == 2
+
+
 def test_out_of_core_writer_matches_resident_build(ctx1):
     """gmm_store_sequence (numpy, tile-by-tile) == similarity_graph (sharded)."""
     from repro.graphs import gmm_points, similarity_graph
