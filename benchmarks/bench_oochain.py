@@ -1,15 +1,19 @@
-"""Out-of-core chain build: streamed (store-backed S/T/P) vs resident, and
-the max-n-under-budget table for the chain working set.
+"""Out-of-core chain build: streamed (store-backed S/T/P) vs resident, the
+max-n-under-budget table for the chain working set, and the panel-I/O sweep
+(prefetch depth x tile codec x solver batch) with real bytes-moved columns.
 
 The chain product is the O(n^3) hot spot AND (after the PR-2 snapshot store
 removed the adjacency term) the remaining HBM bound: a resident build holds
 ~5 n^2 fp32 matrices (S, T, P, P1, P2).  The out-of-core build spills them
 through a TileStore scratch and keeps only O(n * panel) on device; this
 benchmark measures both paths, verifies the scores stay allclose, and emits
-the max n that fits a given device budget for each mode as JSON.
+the max n that fits a given device budget for each mode as JSON.  The sweep
+(``--sweep``) exercises the unified panel pipeline's knobs and reports
+scratch reads (pre-codec), decoded bytes, and H2D traffic per combination,
+so disk-traffic regressions across PRs are visible in the weekly artifact.
 
   PYTHONPATH=src python benchmarks/bench_oochain.py --n 256 --d 4 \
-      --budget-mb 1.0 --out benchmarks/bench_oochain.json
+      --budget-mb 1.0 --sweep --out benchmarks/bench_oochain.json
 """
 
 from __future__ import annotations
@@ -27,11 +31,14 @@ from repro.core import (
     CommuteConfig,
     chain_product,
     detect_anomalies,
+    estimate_solution,
     reset_stream_stats,
     stream_stats,
     trivial_context,
 )
+from repro.core.embedding import edge_projection
 from repro.store import TileStore
+from repro.store.tilestore import _zstd_backend
 
 
 def _sym(n: int, seed: int) -> np.ndarray:
@@ -41,7 +48,8 @@ def _sym(n: int, seed: int) -> np.ndarray:
     return a
 
 
-def run(n=256, d=4, q=4, grid=None, budget_mb=1.0, out_path=None, out=print):
+def run(n=256, d=4, q=4, grid=None, budget_mb=1.0, do_sweep=False, out_path=None,
+        out=print):
     ctx = trivial_context()
     budget = int(budget_mb * 1e6)
     a1, a2 = _sym(n, 0), _sym(n, 1)
@@ -86,7 +94,8 @@ def run(n=256, d=4, q=4, grid=None, budget_mb=1.0, out_path=None, out=print):
         f"{budget / 1e6:.2f} MB budget")
     out(f"[bench_oochain] oocore build:   {oocore_s:.2f}s, "
         f"peak device panel residency {st.peak_live_bytes / 1e6:.2f} MB "
-        f"({st.panels} panels, {st.bytes_h2d / 1e6:.1f} MB H2D) "
+        f"({st.panels} panels, {st.bytes_read / 1e6:.1f} MB scratch reads, "
+        f"{st.bytes_decoded / 1e6:.1f} MB decoded, {st.bytes_h2d / 1e6:.1f} MB H2D) "
         f"-> {'WITHIN' if st.peak_live_bytes <= budget else 'OVER'} budget")
     out(f"[bench_oochain] end-to-end scores allclose: {close}")
 
@@ -101,6 +110,8 @@ def run(n=256, d=4, q=4, grid=None, budget_mb=1.0, out_path=None, out=print):
         out(f"[bench_oochain] budget {budget / 1e6:.2f} MB: max n resident ~{n_res}, "
             f"oocore grid={g} ~{n_oo} ({n_oo / max(n_res, 1):.1f}x)")
 
+    sweep_rows = sweep(n=n, d=d, q=q, grid=grid, budget=budget, out=out) if do_sweep else None
+
     result = {
         "bench": "oochain",
         "n": n, "d": d, "q": q, "panel_rows": ph,
@@ -111,16 +122,101 @@ def run(n=256, d=4, q=4, grid=None, budget_mb=1.0, out_path=None, out=print):
         "oocore_peak_mb": st.peak_live_bytes / 1e6,
         "oocore_panels": st.panels,
         "oocore_h2d_mb": st.bytes_h2d / 1e6,
+        "oocore_read_mb": st.bytes_read / 1e6,
+        "oocore_decoded_mb": st.bytes_decoded / 1e6,
         "resident_within_budget": resident_peak <= budget,
         "oocore_within_budget": st.peak_live_bytes <= budget,
         "scores_allclose": close,
         "max_n_resident": n_res,
         "max_n_oocore": table,
+        "sweep": sweep_rows,
     }
     if out_path:
         Path(out_path).write_text(json.dumps(result, indent=2))
         out(f"[bench_oochain] wrote {out_path}")
     return result
+
+
+def sweep(n=128, d=3, q=8, grid=None, budget=int(1e6), out=print):
+    """Panel-I/O knob sweep: prefetch depth x tile codec x solver batch.
+
+    One out-of-core build + Richardson solve per combination, with the
+    build/solve phases' byte counters split out -- the bytes-moved columns
+    are what the codec and the iteration batching are each supposed to bend
+    (codec: bytes_read < bytes_decoded; solver_batch: solve-phase reads drop
+    ~batch x), so a combination that stops bending them is a regression.
+    """
+    ctx = trivial_context()
+    g = grid or 8
+    a = _sym(n, 0)
+    store = TileStore.create(None, n=n, grid=g)
+    h = store.put_snapshot("t0", a)
+    # Combination-invariant RHS, computed once OUTSIDE the sweep: its panel
+    # traffic belongs to neither the build nor the solve phase and must not
+    # pollute the per-combination counters or budget verdicts.
+    y = edge_projection(ctx, h, 0, 8)
+    ref = None
+
+    codecs = ["raw", "bf16"] + (["zstd"] if _zstd_backend() is not None else [])
+    if _zstd_backend() is None:
+        out("[bench_oochain] sweep: no zstd backend installed; sweeping raw/bf16")
+    rows = []
+    out(f"[bench_oochain] sweep n={n} d={d} q={q} grid={g} "
+        f"(budget {budget / 1e6:.2f} MB)")
+    out("[bench_oochain]  depth codec batch | build_s solve_s | "
+        "bread_MB sread_MB dec_MB h2d_MB | peak_MB verdict close")
+    for codec in codecs:
+        for depth in (1, 2, 4):
+            for batch in (1, 4):
+                work = TileStore.create(None, n=n, grid=g, codec=codec)
+                reset_stream_stats()
+                t0 = time.perf_counter()
+                op = chain_product(ctx, h, d, oocore=True, oocore_work=work,
+                                   prefetch_depth=depth)
+                jax.block_until_ready(op.deg)
+                build_s = time.perf_counter() - t0
+                bst = stream_stats()
+                build_read, build_dec, build_h2d = (
+                    bst.bytes_read, bst.bytes_decoded, bst.bytes_h2d)
+
+                reset_stream_stats()
+                t0 = time.perf_counter()
+                z = estimate_solution(ctx, op, y, q, solver_batch=batch,
+                                      prefetch_depth=depth)
+                jax.block_until_ready(z)
+                solve_s = time.perf_counter() - t0
+                sst = stream_stats()
+                op.release_scratch()
+
+                if ref is None:
+                    ref = np.asarray(z)  # depth/batch never change numerics
+                tol = 1e-4 if codec != "bf16" else 5e-2
+                close = bool(np.allclose(np.asarray(z), ref, rtol=tol, atol=tol))
+                peak = max(bst.peak_live_bytes, sst.peak_live_bytes)
+                verdict = "WITHIN" if peak <= budget else "OVER"
+                row = {
+                    "prefetch_depth": depth, "codec": work.manifest.codec,
+                    "solver_batch": batch,
+                    "build_s": build_s, "solve_s": solve_s,
+                    "build_read_mb": build_read / 1e6,
+                    "build_decoded_mb": build_dec / 1e6,
+                    "build_h2d_mb": build_h2d / 1e6,
+                    "solve_read_mb": sst.bytes_read / 1e6,
+                    "solve_decoded_mb": sst.bytes_decoded / 1e6,
+                    "solve_h2d_mb": sst.bytes_h2d / 1e6,
+                    "bytes_moved_mb": (build_read + sst.bytes_read) / 1e6,
+                    "peak_mb": peak / 1e6,
+                    "within_budget": peak <= budget,
+                    "solution_close": close,
+                }
+                rows.append(row)
+                out(f"[bench_oochain]  {depth:5d} {codec:>5s} {batch:5d} | "
+                    f"{build_s:7.2f} {solve_s:7.2f} | "
+                    f"{build_read / 1e6:8.2f} {sst.bytes_read / 1e6:8.2f} "
+                    f"{(build_dec + sst.bytes_decoded) / 1e6:6.1f} "
+                    f"{(build_h2d + sst.bytes_h2d) / 1e6:6.1f} | "
+                    f"{peak / 1e6:7.2f} {verdict:>6s} {close}")
+    return rows
 
 
 def main():
@@ -130,10 +226,13 @@ def main():
     ap.add_argument("--q", type=int, default=4)
     ap.add_argument("--grid", type=int, default=None, help="store/scratch tiles per side")
     ap.add_argument("--budget-mb", type=float, default=1.0)
+    ap.add_argument("--sweep", action="store_true",
+                    help="prefetch-depth x codec x solver-batch sweep with "
+                         "bytes-moved columns")
     ap.add_argument("--out", default=None, help="write results JSON here")
     args = ap.parse_args()
     run(n=args.n, d=args.d, q=args.q, grid=args.grid, budget_mb=args.budget_mb,
-        out_path=args.out)
+        do_sweep=args.sweep, out_path=args.out)
 
 
 if __name__ == "__main__":

@@ -55,6 +55,7 @@ def node_anomaly_scores(
     e2: Embedding,
     *,
     use_kernel: bool = False,
+    prefetch_depth: int | None = None,
 ) -> jax.Array:
     """F (n,) row-sharded; fused blockwise Alg. 4 lines 3-6.
 
@@ -63,14 +64,17 @@ def node_anomaly_scores(
     distribution, the kernel owns the on-chip schedule.
 
     Either adjacency may be a store-backed snapshot handle: the scorer then
-    streams matching row panels of both endpoints (double-buffered prefetch)
-    and the same tile body runs off-core, bitwise identical to the resident
-    run.  Only the (n, k_RP) embeddings stay device-resident.
+    streams matching row panels of both endpoints (``prefetch_depth`` panels
+    staged ahead by the panel pipeline) and the same tile body runs off-core,
+    bitwise identical to the resident run.  Only the (n, k_RP) embeddings
+    stay device-resident.
     """
     # Z is (n, k_RP) -- small; replicate it for tile-local access to rows+cols.
     z1 = ctx.constrain(e1.z, P(None, None))
     z2 = ctx.constrain(e2.z, P(None, None))
-    runner = tile_stream if is_streamable(a1) or is_streamable(a2) else tile_map
+    streamed = is_streamable(a1) or is_streamable(a2)
+    kwargs = {"prefetch_depth": prefetch_depth} if streamed else {}
+    runner = tile_stream if streamed else tile_map
     return runner(
         ctx,
         _cad_scores_kernel_body if use_kernel else _cad_scores_body,
@@ -89,6 +93,7 @@ def node_anomaly_scores(
             P(),
         ),
         reduce="cols",
+        **kwargs,
     )
 
 
@@ -117,7 +122,9 @@ def detect_anomalies(
     cfg = cfg or CommuteConfig()
     e1 = commute_time_embedding(ctx, a1, cfg, use_kernel=use_kernel)
     e2 = commute_time_embedding(ctx, a2, cfg, use_kernel=use_kernel)
-    scores = node_anomaly_scores(ctx, a1, a2, e1, e2, use_kernel=use_kernel)
+    scores = node_anomaly_scores(
+        ctx, a1, a2, e1, e2, use_kernel=use_kernel, prefetch_depth=cfg.prefetch_depth
+    )
     idx, vals = top_anomalies(scores, top_k)
     # The operators die with this call: retire any out-of-core scratch they
     # hold, so a pairwise loop over a disk scratch dir stays bounded.

@@ -54,20 +54,24 @@ class ChainOperator:
     ``p1`` / ``p2`` are resident sharded arrays, or store-backed snapshot
     handles when the operator was built out-of-core
     (:func:`repro.core.oochain.chain_product_oocore`) -- the solver streams
-    handle-backed operators per panel.
+    handle-backed operators per panel.  ``prefetch_depth`` rides along as
+    static metadata so every downstream consumer of a store-backed operator
+    (the solver's mat-vecs, scoring passes) stages panels with the depth the
+    build was configured for.
     """
 
     p1: jax.Array  # (n, n)  Z^ = D^{-1/2} P D^{-1/2}  (array or store handle)
     p2: jax.Array  # (n, n)  Z^ @ L                    (array or store handle)
     deg: jax.Array  # (n,)
     vol: jax.Array  # scalar V_G
+    prefetch_depth: int = 2  # panel-pipeline staging depth for streamed consumers
 
     def tree_flatten(self):
-        return (self.p1, self.p2, self.deg, self.vol), None
+        return (self.p1, self.p2, self.deg, self.vol), (self.prefetch_depth,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children)
+        return cls(*children, prefetch_depth=aux[0])
 
     def release_scratch(self) -> None:
         """Retire store-backed P1 / P2 from their scratch store (no-op for
@@ -87,30 +91,34 @@ def _col_scale_body(tile, blk, v):
     return blk.astype(jnp.float32) * v[tile.cols][None, :]
 
 
-def _matmul_panels_from_store(ctx: DistContext, m: jax.Array, h, out_dtype) -> jax.Array:
+def _matmul_panels_from_store(
+    ctx: DistContext, m: jax.Array, h, out_dtype, prefetch_depth: int | None = None
+) -> jax.Array:
     """M @ A with A streamed from the store: per-panel GEMM accumulation.
 
     M @ A = sum_K M[:, K] @ A[K, :] over row panels K of the stored adjacency
     -- each term is one resident (n, ph) x (ph, n) GEMM against a panel
-    fetched from host/disk, so A is never fully device-resident.  (Used by
-    the ``fuse_l`` build; the panel-accumulation order makes this path
+    prefetched from host/disk by the panel pipeline, so A is never fully
+    device-resident and the fetch/decode overlaps the GEMMs.  (Used by the
+    ``fuse_l`` build; the panel-accumulation order makes this path
     close-but-not-bitwise vs the resident ``fuse_l`` GEMM.)
     """
+    from repro.store import PanelPipeline  # deferred: core->store only on this path
+
     n = h.shape[0]
     ph = int(np.lcm(int(h.panel_rows), ctx.n_row_shards))
     sharding = ctx.sharding(ctx.matrix_spec)
     st = stream_stats()
     acc = sharded_zeros((n, n), jnp.float32, sharding)
-    for r0 in range(0, n, ph):
-        panel = jax.device_put(np.ascontiguousarray(h.read_panel(r0, ph)), sharding)
-        st.panels += 1
-        st.bytes_h2d += panel.nbytes
-        st._note_live(panel.nbytes)
-        m_cols = lax.dynamic_slice(m, (0, r0), (n, ph))
-        acc = acc + jnp.dot(
-            m_cols.astype(jnp.float32), panel.astype(jnp.float32),
-            preferred_element_type=jnp.float32,
-        )
+    with PanelPipeline(
+        [h], range(0, n, ph), ph, depth=prefetch_depth, sharding=sharding, stats=st
+    ) as pipe:
+        for r0, (panel,) in pipe:
+            m_cols = lax.dynamic_slice(m, (0, r0), (n, ph))
+            acc = acc + jnp.dot(
+                m_cols.astype(jnp.float32), panel.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
     return ctx.constrain(acc.astype(out_dtype), ctx.matrix_spec)
 
 
@@ -127,6 +135,8 @@ def chain_product(
     oocore: bool = False,
     oocore_work=None,
     oocore_panel_rows: int | None = None,
+    tile_codec: str = "raw",
+    prefetch_depth: int | None = None,
 ) -> ChainOperator:
     """Build the chain operator from ``a``: a resident sharded adjacency or a
     store-backed snapshot handle.
@@ -150,6 +160,11 @@ def chain_product(
     bitwise, vs the resident build.  ``schedule`` / ``use_kernel`` / ``dtype``
     govern the resident GEMMs only and are ignored out-of-core (the scratch
     and operator are always fp32).
+
+    ``tile_codec`` / ``prefetch_depth`` are the panel-I/O knobs and matter
+    only where panels actually stream: the scratch store encoding and the
+    panel-pipeline staging depth of the out-of-core build (and of the
+    streamed ``fuse_l`` GEMM with a handle-backed ``a``).
     """
     if d_len < 1:
         raise ValueError("chain length d must be >= 1")
@@ -167,12 +182,16 @@ def chain_product(
             fuse_l=fuse_l,
             work=oocore_work,
             panel_rows=oocore_panel_rows,
+            tile_codec=tile_codec,
+            prefetch_depth=prefetch_depth,
         )
     mm = partial(matmul, ctx, schedule=schedule, out_dtype=dtype, use_kernel=use_kernel)
 
-    deg = lap.degrees(ctx, a)
+    deg = lap.degrees(ctx, a, prefetch_depth=prefetch_depth)
     vol = lap.volume(ctx, deg)
-    s = lap.normalized_adjacency(ctx, a, deg, deflate=deflate, dtype=dtype)
+    s = lap.normalized_adjacency(
+        ctx, a, deg, deflate=deflate, dtype=dtype, prefetch_depth=prefetch_depth
+    )
 
     t = s
     p = add_scaled_identity(ctx, s, 1.0)  # I + S
@@ -195,10 +214,12 @@ def chain_product(
             ctx, _col_scale_body, p1, deg, in_specs=(ctx.matrix_spec, P(None)), out_dtype=dtype
         )
         if is_streamable(a):
-            p2 = jnp.subtract(p1d, _matmul_panels_from_store(ctx, p1, a, dtype))
+            p2 = jnp.subtract(
+                p1d, _matmul_panels_from_store(ctx, p1, a, dtype, prefetch_depth)
+            )
         else:
             p2 = jnp.subtract(p1d, mm(p1, a.astype(dtype)))
     else:
-        l_mat = lap.laplacian(ctx, a, deg, dtype=dtype)
+        l_mat = lap.laplacian(ctx, a, deg, dtype=dtype, prefetch_depth=prefetch_depth)
         p2 = mm(p1, l_mat)
     return ChainOperator(p1=p1, p2=p2, deg=deg, vol=vol)

@@ -235,7 +235,13 @@ def _rowblock_body(tile, blk, x):
     )
 
 
-def matmul_rowblock(ctx: DistContext, m: jax.Array, x: jax.Array) -> jax.Array:
+def matmul_rowblock(
+    ctx: DistContext,
+    m: jax.Array,
+    x: jax.Array,
+    *,
+    prefetch_depth: int | None = None,
+) -> jax.Array:
     """(n x n) @ (n x k) with k << n: the Richardson mat-vec workhorse.
 
     m is matrix-sharded; x is row-sharded and tiny, so XLA's reduce-scatter /
@@ -243,8 +249,9 @@ def matmul_rowblock(ctx: DistContext, m: jax.Array, x: jax.Array) -> jax.Array:
 
     ``m`` may also be a store-backed snapshot handle (an out-of-core chain's
     P1 / P2): the mat-vec then streams row panels of m against the small
-    replicated x, so the operator matrix is never device-resident -- the
-    solver inherits the panel residency bound of the chain build.
+    replicated x (``prefetch_depth`` panels staged ahead by the panel
+    pipeline), so the operator matrix is never device-resident -- the solver
+    inherits the panel residency bound of the chain build.
     """
     if is_streamable(m):
         xr = ctx.constrain(x, P(None, None))
@@ -256,6 +263,7 @@ def matmul_rowblock(ctx: DistContext, m: jax.Array, x: jax.Array) -> jax.Array:
             in_specs=(ctx.matrix_spec, P(None, None)),
             reduce="cols",
             out_spec=ctx.rowblock_spec,
+            prefetch_depth=prefetch_depth,
         )
         return ctx.constrain(out.astype(x.dtype), ctx.rowblock_spec)
     out = jnp.dot(m, x.astype(jnp.float32), preferred_element_type=jnp.float32)
@@ -301,19 +309,20 @@ def blockwise_unary(
     x: jax.Array,
     *,
     out_dtype=None,
+    prefetch_depth: int | None = None,
 ) -> jax.Array:
     """Apply ``fn(block, global_rows, global_cols) -> block`` tile-locally.
 
     ``x`` may be a store-backed snapshot handle (see :mod:`repro.store`): the
-    transform then *streams* -- each row panel is fetched from host/disk,
-    transformed, and written into the sharded output, so the raw input is
-    never device-resident (this is how the chain build materializes S and L
-    without ever loading A).
+    transform then *streams* -- each row panel is fetched from host/disk
+    (``prefetch_depth`` panels staged ahead), transformed, and written into
+    the sharded output, so the raw input is never device-resident (this is
+    how the chain build materializes S and L without ever loading A).
     """
     out_dtype = out_dtype or x.dtype
     body = lambda tile, blk: fn(blk, tile.rows, tile.cols)
     if is_streamable(x):
-        return tile_stream(ctx, body, x, out_dtype=out_dtype)
+        return tile_stream(ctx, body, x, out_dtype=out_dtype, prefetch_depth=prefetch_depth)
     return tile_map(ctx, body, x, out_dtype=out_dtype)
 
 

@@ -46,6 +46,13 @@ class CommuteConfig:
     oocore: bool = False
     oocore_dir: str | None = None  # scratch dir; None = host-RAM scratch
     oocore_panel_rows: int | None = None  # override the streaming unit
+    # Panel-I/O knobs (see repro.store.PanelPipeline): staging depth of the
+    # background prefetch, scratch-tile storage codec (raw / bf16 / zstd),
+    # and Richardson iteration batching (stream P2 once per `solver_batch`
+    # iterations, replay from host RAM -- cuts solve-phase scratch reads).
+    prefetch_depth: int = 2
+    tile_codec: str = "raw"
+    solver_batch: int = 1
 
     def k_rp(self, n: int) -> int:
         if self.k_override is not None:
@@ -66,7 +73,14 @@ def _edge_projection_body(tile, blk, seed, ks):
     return jnp.sum(s[:, :, None] * q, axis=1)
 
 
-def edge_projection(ctx: DistContext, a: jax.Array, seed: int, k: int) -> jax.Array:
+def edge_projection(
+    ctx: DistContext,
+    a: jax.Array,
+    seed: int,
+    k: int,
+    *,
+    prefetch_depth: int | None = None,
+) -> jax.Array:
     """Y = B^T W^{1/2} Q for k Rademacher columns, (n, k) row-sharded.
 
     Y[i, c] = sum_j sqrt(A[i, j]) * Q_c[i, j] with Q_c antisymmetric +/-1.
@@ -90,7 +104,10 @@ def edge_projection(ctx: DistContext, a: jax.Array, seed: int, k: int) -> jax.Ar
         out_spec=P(ctx.row_axes, None),
     )
     if is_streamable(a):
-        y = tile_stream(ctx, _edge_projection_body, a, seed_arr, ks, **kwargs)
+        y = tile_stream(
+            ctx, _edge_projection_body, a, seed_arr, ks,
+            prefetch_depth=prefetch_depth, **kwargs,
+        )
     else:
         y = tile_map(ctx, _edge_projection_body, a, seed_arr, ks, **kwargs)
     return y * (1.0 / jnp.sqrt(jnp.float32(k)))
@@ -132,9 +149,19 @@ def commute_time_embedding(
             oocore=cfg.oocore,
             oocore_work=cfg.oocore_dir,
             oocore_panel_rows=cfg.oocore_panel_rows,
+            tile_codec=cfg.tile_codec,
+            prefetch_depth=cfg.prefetch_depth,
         )
-    y = edge_projection(ctx, a, cfg.seed, k)
-    z = estimate_solution(ctx, op, y, cfg.q, deflate=cfg.deflate)
+    y = edge_projection(ctx, a, cfg.seed, k, prefetch_depth=cfg.prefetch_depth)
+    z = estimate_solution(
+        ctx,
+        op,
+        y,
+        cfg.q,
+        deflate=cfg.deflate,
+        solver_batch=cfg.solver_batch,
+        prefetch_depth=cfg.prefetch_depth,
+    )
     return Embedding(z=z, vol=op.vol, op=op)
 
 

@@ -45,14 +45,18 @@ def _laplacian_body(tile, blk, deg):
     return eye * deg[tile.rows][:, None] - blk.astype(jnp.float32)
 
 
-def degrees(ctx: DistContext, a: jax.Array) -> jax.Array:
+def degrees(
+    ctx: DistContext, a: jax.Array, *, prefetch_depth: int | None = None
+) -> jax.Array:
     """d = A @ 1 as a replicated-column, row-sharded (n,) vector.
 
     Accepts a resident sharded adjacency or a store-backed snapshot handle;
     the streamed run is bitwise identical (row sums are row-parallel).
     """
     if is_streamable(a):
-        return tile_stream(ctx, _degrees_body, a, reduce="cols")
+        return tile_stream(
+            ctx, _degrees_body, a, reduce="cols", prefetch_depth=prefetch_depth
+        )
     return tile_map(ctx, _degrees_body, a, reduce="cols")
 
 
@@ -67,6 +71,7 @@ def normalized_adjacency(
     *,
     deflate: bool = True,
     dtype=jnp.float32,
+    prefetch_depth: int | None = None,
 ) -> jax.Array:
     """S = D^{-1/2} A D^{-1/2}, optionally deflated.
 
@@ -78,7 +83,9 @@ def normalized_adjacency(
     """
     vol = volume(ctx, deg)
     inv_sqrt = jnp.where(deg > 0, lax.rsqrt(jnp.maximum(deg, 1e-30)), 0.0)
-    runner = tile_stream if is_streamable(a) else tile_map
+    streamed = is_streamable(a)
+    runner = tile_stream if streamed else tile_map
+    kwargs = {"prefetch_depth": prefetch_depth} if streamed else {}
     if deflate:
         return runner(
             ctx,
@@ -89,6 +96,7 @@ def normalized_adjacency(
             vol,
             in_specs=(ctx.matrix_spec, P(None), P(None), P()),
             out_dtype=dtype,
+            **kwargs,
         )
     return runner(
         ctx,
@@ -97,12 +105,22 @@ def normalized_adjacency(
         inv_sqrt,
         in_specs=(ctx.matrix_spec, P(None)),
         out_dtype=dtype,
+        **kwargs,
     )
 
 
-def laplacian(ctx: DistContext, a: jax.Array, deg: jax.Array, *, dtype=jnp.float32) -> jax.Array:
+def laplacian(
+    ctx: DistContext,
+    a: jax.Array,
+    deg: jax.Array,
+    *,
+    dtype=jnp.float32,
+    prefetch_depth: int | None = None,
+) -> jax.Array:
     """L = D - A, materialized sharded (the paper-faithful path)."""
-    runner = tile_stream if is_streamable(a) else tile_map
+    streamed = is_streamable(a)
+    runner = tile_stream if streamed else tile_map
+    kwargs = {"prefetch_depth": prefetch_depth} if streamed else {}
     return runner(
         ctx,
         _laplacian_body,
@@ -110,4 +128,5 @@ def laplacian(ctx: DistContext, a: jax.Array, deg: jax.Array, *, dtype=jnp.float
         deg,
         in_specs=(ctx.matrix_spec, P(None)),
         out_dtype=dtype,
+        **kwargs,
     )

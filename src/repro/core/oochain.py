@@ -49,7 +49,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import laplacian as lap
 from repro.core.chain import ChainOperator
 from repro.core.distmatrix import DistContext
-from repro.core.tiles import _PanelSource, is_streamable, sharded_zeros, stream_stats
+from repro.core.tiles import is_streamable, sharded_zeros, stream_stats
 
 # ---------------------------------------------------------------------------
 # panel programs (module-level jit: compiled once per geometry, the row
@@ -119,16 +119,6 @@ def _gemm_step_neg(acc, block, right):
 # ---------------------------------------------------------------------------
 
 
-def _reader(x) -> _PanelSource:
-    """Row-panel fetcher (shared with tile_stream; see tiles._PanelSource)."""
-    return _PanelSource(x, streamed=is_streamable(x))
-
-
-def _host_panel(src: _PanelSource, r0: int, height: int) -> np.ndarray:
-    """One (height, n) row panel on the host (D2H for resident operands)."""
-    return np.asarray(src.fetch(r0, height))
-
-
 def _auto_grid(n: int, quantum: int) -> int:
     """Default working-store grid: panels of >= 32 rows, >= 2 per side.
 
@@ -160,6 +150,8 @@ def chain_product_oocore(
     fuse_l: bool = False,
     work=None,
     panel_rows: int | None = None,
+    tile_codec: str = "raw",
+    prefetch_depth: int | None = None,
 ) -> ChainOperator:
     """Build the chain operator with store-backed working matrices.
 
@@ -170,6 +162,16 @@ def chain_product_oocore(
     either way; the directory form additionally bounds host RAM).
     ``panel_rows`` overrides the streaming unit.
 
+    All panel fetches go through :class:`repro.store.PanelPipeline`: a
+    background thread keeps up to ``prefetch_depth`` panels per operand
+    decoded and staged ahead of the GEMM/unary passes, so scratch reads (and
+    codec decode) overlap device compute.  ``tile_codec`` selects the scratch
+    tile encoding when this call creates the scratch store (``raw`` default;
+    ``bf16`` halves scratch bytes at a per-level rounding of the working
+    matrices, ``zstd`` compresses losslessly where the backend is installed)
+    -- a caller-supplied ``work`` store keeps whatever codec it was created
+    with.
+
     Every snapshot id in the scratch is prefixed with a fresh nonce, so one
     scratch store (or directory) can serve many builds -- including resumed
     processes -- without id collisions; intermediates are removed as soon as
@@ -179,7 +181,11 @@ def chain_product_oocore(
     window).  ``dtype`` is accepted for signature parity but ignored: the
     scratch and the returned operator are always fp32.
     """
-    from repro.store import TileStore  # deferred: core->store only on this path
+    from repro.store import (  # deferred: core->store only on this path
+        DEFAULT_PREFETCH_DEPTH,
+        PanelPipeline,
+        TileStore,
+    )
 
     if d_len < 1:
         raise ValueError("chain length d must be >= 1")
@@ -188,9 +194,11 @@ def chain_product_oocore(
     src_quantum = int(a.panel_rows) if is_streamable(a) else 1
     quantum = int(np.lcm.reduce(np.asarray([R, C, src_quantum], np.int64)))
     if work is None:
-        work = TileStore.create(None, n=n, grid=_auto_grid(n, quantum))
+        work = TileStore.create(None, n=n, grid=_auto_grid(n, quantum), codec=tile_codec)
     elif isinstance(work, (str, Path)):
-        work = TileStore.create(work, n=n, grid=_auto_grid(n, quantum))
+        work = TileStore.create(
+            work, n=n, grid=_auto_grid(n, quantum), codec=tile_codec
+        )
     if work.n != n:
         raise ValueError(f"working store holds n={work.n}, adjacency is n={n}")
     ph = int(panel_rows or np.lcm(work.tile_rows, quantum))
@@ -200,30 +208,45 @@ def chain_product_oocore(
             f"({work.tile_rows}) and the mesh/source quantum ({quantum})"
         )
     tag = f"w{uuid.uuid4().hex[:8]}."
+    origins = list(range(0, n, ph))
 
     st = stream_stats()
     st.calls += 1
     sharding = ctx.sharding(ctx.matrix_spec)
     rep = ctx.sharding(P(None))
 
-    deg = lap.degrees(ctx, a)
+    deg = lap.degrees(ctx, a, prefetch_depth=prefetch_depth)
     vol = lap.volume(ctx, deg)
     deg_r = jax.device_put(deg, rep)
     inv_sqrt_r = jnp.where(deg_r > 0, lax.rsqrt(jnp.maximum(deg_r, 1e-30)), 0.0)
 
-    def put_panel(host: np.ndarray):
-        dev = jax.device_put(np.ascontiguousarray(host), sharding)
+    def put_panel(host):
+        dev = jax.device_put(np.ascontiguousarray(np.asarray(host)), sharding)
         st.panels += 1
         st.bytes_h2d += dev.nbytes
         return dev
 
-    def unary_pass(out_id: str, reader: _PanelSource, fn, *args):
+    def stream(source, walk=None, *, device: bool):
+        """A prefetching pipeline over row panels of one operand."""
+        return PanelPipeline(
+            [source],
+            walk if walk is not None else origins,
+            ph,
+            depth=prefetch_depth,
+            sharding=sharding if device else None,
+            stats=st,
+        )
+
+    def unary_pass(out_id: str, source, fn, *args):
         """Stream panels through a jitted panel program into the store."""
-        with work.writer(out_id) as w:
-            for r0 in range(0, n, ph):
-                blk = put_panel(_host_panel(reader, r0, ph))
+        with work.writer(out_id) as w, stream(source, device=True) as pipe:
+            for r0, (blk,) in pipe:
+                # Resident sources bypass the pipeline's staging (and its
+                # residency accounting): count the panel we just put ourselves.
+                blk = blk if is_streamable(source) else put_panel(blk)
+                live = pipe.device_live_bytes if is_streamable(source) else blk.nbytes
                 out = fn(blk, jnp.int32(r0), *args)
-                st._note_live(blk.nbytes + out.nbytes)
+                st._note_live(live + out.nbytes)
                 w.put_row_panel(r0, np.asarray(out))
         return work.snapshot(out_id)
 
@@ -235,39 +258,51 @@ def chain_product_oocore(
         "left_colscale" (C = left * col_scale - ...; the fuse_l P2 build).
         The left row panel stays on the host; only its (ph, ph) K-blocks, the
         streamed right panels and the accumulator are ever device-resident.
+        Both operands are prefetched: the left panels one GEMM row ahead
+        (host ring), the right panels along the full nested K-walk (device
+        staging), so neither fetch serializes with the MXU.
         """
-        lread, rread = _reader(left_h), _reader(right_h)
         step = _gemm_step if sign > 0 else _gemm_step_neg
-        with work.writer(out_id) as w:
-            for r0 in range(0, n, ph):
-                left_host = _host_panel(lread, r0, ph)
+        nested = [k0 for _ in origins for k0 in origins]  # right walk, per row
+        with work.writer(out_id) as w, \
+                stream(left_h, device=False) as lpipe, \
+                stream(right_h, nested, device=True) as rpipe:
+            right_iter = iter(rpipe)
+            for r0, (left_host,) in lpipe:
+                left_host = np.asarray(left_host)
                 if init == "left":
                     acc = put_panel(left_host).astype(jnp.float32)
                 elif init == "left_colscale":
                     acc = _col_scale_panel(put_panel(left_host), col_scale)
                 else:
                     acc = sharded_zeros((ph, n), jnp.float32, sharding)
-                for k0 in range(0, n, ph):
+                for k0 in origins:
+                    _, (right,) = next(right_iter)
+                    if is_streamable(right_h):
+                        right_live = rpipe.device_live_bytes
+                    else:  # resident: our put_panel, not pipeline staging
+                        right = put_panel(right)
+                        right_live = right.nbytes
                     block = put_panel(left_host[:, k0 : k0 + ph])
-                    right = put_panel(_host_panel(rread, k0, ph))
                     acc = step(acc, block, right)
-                    st._note_live(acc.nbytes + block.nbytes + right.nbytes)
+                    st._note_live(acc.nbytes + block.nbytes + right_live)
                 w.put_row_panel(r0, np.asarray(acc))
         return work.snapshot(out_id)
 
     # S (= T at level 0) and P0 = I + S, in one pass over A.  Level ids use a
     # "lvl" infix so they can never collide with the final P1 / P2 outputs.
-    reader_a = _reader(a)
     s_id, p_id = tag + "Tlvl0", tag + "Plvl0"
-    with work.writer(s_id) as ws, work.writer(p_id) as wp:
-        for r0 in range(0, n, ph):
-            blk = put_panel(_host_panel(reader_a, r0, ph))
+    with work.writer(s_id) as ws, work.writer(p_id) as wp, \
+            stream(a, device=True) as apipe:
+        for r0, (blk,) in apipe:
+            blk = blk if is_streamable(a) else put_panel(blk)
+            a_live = apipe.device_live_bytes if is_streamable(a) else blk.nbytes
             if deflate:
                 s_blk = _s_panel_deflated(blk, jnp.int32(r0), inv_sqrt_r, deg_r, vol)
             else:
                 s_blk = _s_panel_plain(blk, jnp.int32(r0), inv_sqrt_r)
             p_blk = _plus_eye_panel(s_blk, jnp.int32(r0))
-            st._note_live(blk.nbytes + s_blk.nbytes + p_blk.nbytes)
+            st._note_live(a_live + s_blk.nbytes + p_blk.nbytes)
             ws.put_row_panel(r0, np.asarray(s_blk))
             wp.put_row_panel(r0, np.asarray(p_blk))
     t_h, p_h = work.snapshot(s_id), work.snapshot(p_id)
@@ -281,15 +316,18 @@ def chain_product_oocore(
         t_h, p_h = t_new, p_new
 
     # the P1 sandwich is the same row/col scaling as the undeflated S build
-    p1_h = unary_pass(tag + "P1", _reader(p_h), _s_panel_plain, inv_sqrt_r)
+    p1_h = unary_pass(tag + "P1", p_h, _s_panel_plain, inv_sqrt_r)
     if fuse_l:
         p2_h = oo_gemm(tag + "P2", p1_h, a, init="left_colscale", sign=-1.0,
                        col_scale=deg_r)
     else:
-        l_h = unary_pass(tag + "L", reader_a, _l_panel, deg_r)
+        l_h = unary_pass(tag + "L", a, _l_panel, deg_r)
         p2_h = oo_gemm(tag + "P2", p1_h, l_h)
         work.remove_snapshot(l_h.snap_id)
     work.remove_snapshot(t_h.snap_id)
     work.remove_snapshot(p_h.snap_id)
 
-    return ChainOperator(p1=p1_h, p2=p2_h, deg=deg, vol=vol)
+    return ChainOperator(
+        p1=p1_h, p2=p2_h, deg=deg, vol=vol,
+        prefetch_depth=prefetch_depth or DEFAULT_PREFETCH_DEPTH,
+    )

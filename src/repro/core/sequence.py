@@ -21,9 +21,10 @@ executor -- adjacencies stay on host/disk and devices only ever hold two row
 *panels* per operand, so residency is bounded by tiles, not snapshots, and n
 is bounded by host/disk capacity rather than HBM.
 
-A streaming global top-k across all transitions is maintained on device:
-after each transition the per-transition top-k is merged into the running
-global top-k with one ``lax.top_k`` over 2k candidates.
+A streaming global top-k across all transitions is maintained by merging each
+transition's top-k into the running global top-k over 2k candidates.  The
+merge runs on the host: the candidates are partially-replicated k-vectors,
+and eager concatenation on those sums replicas on jax 0.4.x (see ROADMAP).
 """
 
 from __future__ import annotations
@@ -34,7 +35,7 @@ from typing import Iterable
 
 import jax
 import jax.numpy as jnp
-from jax import lax
+import numpy as np
 
 from repro.core import chain
 from repro.core.cad import CADResult, node_anomaly_scores, top_anomalies
@@ -87,22 +88,35 @@ class SequenceDetector:
         self._transitions: list[CADResult] = []
         self._seconds: list[float] = []
         self._builds0 = chain.chain_build_count()
-        self._g_val: jax.Array | None = None
-        self._g_idx: jax.Array | None = None
-        self._g_step: jax.Array | None = None
+        self._g_val: np.ndarray | None = None
+        self._g_idx: np.ndarray | None = None
+        self._g_step: np.ndarray | None = None
 
     # -- streaming global top-k ---------------------------------------------
 
-    def _merge_topk(self, idx: jax.Array, val: jax.Array, step: int) -> None:
-        step_arr = jnp.full_like(idx, step)
+    def _merge_topk(self, idx, val, step: int) -> None:
+        """Merge one transition's top-k into the running global top-k, on host.
+
+        Host-side on purpose (the jax 0.4.x partial-replication bug, see
+        ROADMAP / tile_stream): the per-transition candidates are (k,)
+        vectors sharded ``P(row_axes)`` -- *partially replicated* over the
+        column mesh axes -- and eager ``jnp.concatenate`` on such inputs SUMS
+        the replicas on jax 0.4.37 (observed: every candidate doubled on a
+        2x2 mesh).  The candidates are k elements, so the host round-trip is
+        free; ties break toward the lower candidate index, exactly like
+        ``lax.top_k``.
+        """
+        idx = np.asarray(idx)
+        val = np.asarray(val)
+        step_arr = np.full_like(idx, step)
         if self._g_val is None:
-            self._g_val, self._g_idx, self._g_step = val, idx, step_arr
-            return
-        cand_val = jnp.concatenate([self._g_val, val])
-        cand_idx = jnp.concatenate([self._g_idx, idx])
-        cand_step = jnp.concatenate([self._g_step, step_arr])
-        top_val, pos = lax.top_k(cand_val, self.top_k)
-        self._g_val = top_val
+            cand_val, cand_idx, cand_step = val, idx, step_arr
+        else:
+            cand_val = np.concatenate([self._g_val, val])
+            cand_idx = np.concatenate([self._g_idx, idx])
+            cand_step = np.concatenate([self._g_step, step_arr])
+        pos = np.argsort(-cand_val, kind="stable")[: self.top_k]
+        self._g_val = cand_val[pos]
         self._g_idx = cand_idx[pos]
         self._g_step = cand_step[pos]
 
@@ -146,7 +160,13 @@ class SequenceDetector:
         if self._prev is not None:
             a_prev, e_prev = self._prev
             scores = node_anomaly_scores(
-                self.ctx, a_prev, a, e_prev, emb, use_kernel=self.use_kernel
+                self.ctx,
+                a_prev,
+                a,
+                e_prev,
+                emb,
+                use_kernel=self.use_kernel,
+                prefetch_depth=self.cfg.prefetch_depth,
             )
             idx, vals = top_anomalies(scores, self.top_k)
             out = CADResult(scores=scores, top_idx=idx, top_val=vals)
@@ -165,9 +185,9 @@ class SequenceDetector:
             raise ValueError("finalize() before any transition was scored")
         return SequenceResult(
             transitions=self._transitions,
-            global_top_idx=self._g_idx,
-            global_top_val=self._g_val,
-            global_top_step=self._g_step,
+            global_top_idx=jnp.asarray(self._g_idx),
+            global_top_val=jnp.asarray(self._g_val),
+            global_top_step=jnp.asarray(self._g_step),
             n_snapshots=self._t,
             chain_builds=chain.chain_build_count() - self._builds0,
             transition_seconds=self._seconds,

@@ -44,22 +44,50 @@ def estimate_solution(
     q_iters: int,
     *,
     deflate: bool = True,
+    solver_batch: int = 1,
+    prefetch_depth: int | None = None,
 ) -> jax.Array:
-    """x* ~= L^+ b for each of the k columns of b (row-sharded (n, k))."""
+    """x* ~= L^+ b for each of the k columns of b (row-sharded (n, k)).
+
+    Out-of-core operators (store-backed P1/P2) stream their panels through
+    the panel pipeline; ``prefetch_depth`` (default: the operator's build
+    depth) sets the staging depth.  ``solver_batch=b`` batches the Richardson
+    iterations against the *scratch store*: P2 is streamed from the store
+    once per batch of b iterations and its decoded panels are replayed from
+    a host-RAM cache for the remaining b-1 (see
+    :class:`repro.store.CachingHandle`), cutting solve-phase scratch reads
+    ~b x.  The replayed panels are bitwise identical to re-streamed ones, so
+    batching never changes the solution; host cost is one decoded P2 (n^2
+    bytes) while the solve runs.  Ignored for resident operators (nothing
+    streams).
+    """
     if q_iters < 1:
         raise ValueError("q must be >= 1")
+    if solver_batch < 1:
+        raise ValueError("solver_batch must be >= 1")
+    depth = prefetch_depth if prefetch_depth is not None else getattr(
+        op, "prefetch_depth", None
+    )
     b = ctx.constrain(b, ctx.rowblock_spec)
-    chi = matmul_rowblock(ctx, op.p1, b)
+    chi = matmul_rowblock(ctx, op.p1, b, prefetch_depth=depth)
     if deflate:
         chi = deflate_constant(ctx, chi)
 
     if is_streamable(op.p1) or is_streamable(op.p2):
         # Out-of-core operator: the mat-vec streams store panels on the host,
         # so the iteration must stay a Python loop (a traced lax.scan body
-        # cannot fetch panels).  q is small; each step re-streams P2 once.
+        # cannot fetch panels).  q is small; each batch of solver_batch
+        # steps streams P2 from the store once and replays it from host RAM.
+        p2, cached = op.p2, None
+        if solver_batch > 1 and is_streamable(op.p2):
+            from repro.store import CachingHandle  # deferred: optional path
+
+            p2 = cached = CachingHandle(op.p2)
         y = chi
-        for _ in range(q_iters - 1):
-            y = y - matmul_rowblock(ctx, op.p2, y) + chi
+        for it in range(q_iters - 1):
+            if cached is not None and it and it % solver_batch == 0:
+                cached.refresh()  # batch boundary: next pass re-streams the store
+            y = y - matmul_rowblock(ctx, p2, y, prefetch_depth=depth) + chi
             if deflate:
                 y = deflate_constant(ctx, y)
         return y

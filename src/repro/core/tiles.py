@@ -373,10 +373,22 @@ def is_streamable(x) -> bool:
 
 @dataclass
 class StreamStats:
-    """Process-wide accounting of the streaming executor (see stream_stats())."""
+    """Process-wide accounting of the streaming executors (see stream_stats()).
+
+    ``bytes_read`` counts what the backing tier (disk / store RAM) actually
+    served, *before* codec decode -- the number that tracks real disk traffic
+    across PRs.  ``bytes_decoded`` is the post-codec host bytes the prefetch
+    thread produced from them; with ``codec='raw'`` the two move together
+    (modulo .npy headers), with ``bf16``/``zstd`` the gap is the bandwidth
+    the codec saved.  Host-RAM replays (solver iteration batching) add
+    ``panels``/``bytes_h2d`` but zero ``bytes_read`` and zero
+    ``bytes_decoded`` -- nothing was served or decoded for them.
+    """
 
     panels: int = 0  # row panels fetched host -> device
     bytes_h2d: int = 0  # bytes device_put by the executor
+    bytes_read: int = 0  # pre-decode bytes served by the backing store
+    bytes_decoded: int = 0  # post-decode host bytes produced by prefetch
     peak_live_bytes: int = 0  # max bytes of executor-owned panels live at once
     calls: int = 0  # tile_stream invocations
 
@@ -399,16 +411,13 @@ def reset_stream_stats() -> StreamStats:
 
 
 class _PanelSource:
-    """Row-panel fetcher over a streamable handle or a resident array."""
+    """Operand classification for the streaming executor: ``streamed``
+    operands are prefetched by the :class:`repro.store.PanelPipeline`
+    background thread, resident ones are sliced on device at consume time."""
 
     def __init__(self, x, streamed: bool):
         self.x = x
         self.streamed = streamed
-
-    def fetch(self, row0: int, height: int):
-        if self.streamed:
-            return self.x.read_panel(row0, height)
-        return self.x[row0 : row0 + height]
 
 
 def _infer_panel_rows(handles, n0: int, n_row_shards: int) -> int:
@@ -432,6 +441,7 @@ def tile_stream(
     reduce: str | None = None,
     out_dtype=None,
     panel_rows: int | None = None,
+    prefetch_depth: int | None = None,
 ) -> jax.Array:
     """Run a :func:`tile_map` body over *streamed* row panels of the operands.
 
@@ -442,10 +452,13 @@ def tile_stream(
     projection, blockwise builds, the Pallas CAD scorer) run unchanged, with
     ``tile.rows`` carrying the true global ids of the current panel.
 
-    Double-buffered prefetch: the ``jax.device_put`` of panel t+1 is issued
-    before the compute on panel t is dispatched, so the host->device copy
-    overlaps the tile program (JAX transfers and dispatch are async).  Device
-    residency for each streamed operand is therefore at most two panels.
+    Prefetch is owned by :class:`repro.store.PanelPipeline`: a background
+    thread fetches (and codec-decodes) up to ``prefetch_depth`` panels per
+    streamed operand ahead of the consumer (default 2), and the
+    ``jax.device_put`` of panel t+1 is issued before the compute on panel t
+    is dispatched, so host reads, decode and the host->device copy all
+    overlap the tile program.  Device residency for each streamed operand
+    stays at most two panels regardless of the host-side depth.
 
     Bitwise contract: every supported body is row-parallel (output rows
     [r0:r1] depend only on operand rows [r0:r1]), and a panel run splits the
@@ -454,9 +467,10 @@ def tile_stream(
 
     Args mirror :func:`tile_map`; additionally ``panel_rows`` overrides the
     streaming unit (default: the finest tile-aligned height that divides the
-    row-shard grid).  ``reduce`` may be ``None`` (the (n0, n1) output is
-    assembled panel-by-panel into a sharded buffer, donated between updates)
-    or ``"cols"`` (per-panel row reductions are concatenated).
+    row-shard grid) and ``prefetch_depth`` the host-side staging depth.
+    ``reduce`` may be ``None`` (the (n0, n1) output is assembled
+    panel-by-panel into a sharded buffer, donated between updates) or
+    ``"cols"`` (per-panel row reductions are concatenated).
     """
     if reduce not in (None, "cols"):
         raise ValueError(f"tile_stream supports reduce=None or 'cols', got {reduce!r}")
@@ -533,23 +547,6 @@ def tile_stream(
     consts = [op for op, src in zip(operands, sources) if src is None]
     panel_sharding = ctx.sharding(ctx.matrix_spec)
 
-    def put_panels(row0: int):
-        """Fetch + device_put one row panel of every streamed operand."""
-        out, nbytes = [], 0
-        for src in sources:
-            if src is None:
-                continue
-            host = src.fetch(row0, panel_rows)
-            if src.streamed:
-                dev = jax.device_put(np.ascontiguousarray(host), panel_sharding)
-                nbytes += dev.nbytes
-                stats.panels += 1
-            else:
-                dev = host  # already device-resident; slicing is a device op
-            out.append(dev)
-        stats.bytes_h2d += nbytes
-        return out, nbytes
-
     def run_panel(row0: int, panels):
         args = []
         it = iter(panels)
@@ -585,15 +582,22 @@ def tile_stream(
                 buf = sharded_zeros((n0, n1), out.dtype, out_sharding)
             buf = update(buf, out, jnp.int32(row0))
 
+    # All host staging -- background fetch + codec decode + device_put one
+    # origin ahead -- is owned by the panel pipeline; the executor only runs
+    # the compiled panel program and stitches outputs.
+    from repro.store.pipeline import PanelPipeline  # deferred: store is optional
+
     origins = list(range(0, n0, panel_rows))
-    cur, cur_bytes = put_panels(origins[0])
-    for r0, nxt_r0 in zip(origins, origins[1:]):
-        nxt, nxt_bytes = put_panels(nxt_r0)  # H2D for t+1 before compute on t
-        stats._note_live(cur_bytes + nxt_bytes)
-        consume(r0, cur)
-        cur, cur_bytes = nxt, nxt_bytes
-    stats._note_live(cur_bytes)
-    consume(origins[-1], cur)
+    with PanelPipeline(
+        [src.x for src in sources if src is not None],
+        origins,
+        panel_rows,
+        depth=prefetch_depth,
+        sharding=panel_sharding,
+        stats=stats,
+    ) as pipe:
+        for r0, panels in pipe:
+            consume(r0, panels)
 
     if reduce == "cols":
         if len(reduced_outs) == 1:

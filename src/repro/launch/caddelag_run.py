@@ -58,12 +58,33 @@ def main():
     ap.add_argument("--oocore-dir", default=None, metavar="DIR",
                     help="scratch dir for --oocore-chain working matrices "
                          "(default: host-RAM scratch)")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="panel-pipeline staging depth: how many row panels the "
+                         "background prefetch thread keeps decoded ahead of compute")
+    ap.add_argument("--tile-codec", default="raw", choices=["raw", "bf16", "zstd"],
+                    help="tile storage codec for --store and the --oocore-chain "
+                         "scratch (bf16 halves bytes; zstd needs the optional "
+                         "'zstandard' package and falls back to raw without it)")
+    ap.add_argument("--solver-batch", type=int, default=1,
+                    help="Richardson iterations per scratch stream of P2: the "
+                         "solver streams the store once per batch and replays "
+                         "decoded panels from host RAM (identical scores, "
+                         "~batch x fewer scratch reads)")
     args = ap.parse_args()
+
+    # Resolve the codec once up front: a backend-less zstd request degrades to
+    # raw (with a warning) and everything downstream -- scratch stores, the
+    # snapshot store, the summary lines -- must report what tiles really are.
+    from repro.store import resolve_codec
+
+    effective_codec = resolve_codec(args.tile_codec).name
 
     mesh = make_cpu_mesh(data=args.data, model=args.model)
     ctx = make_context(mesh)
     cfg = CommuteConfig(eps_rp=args.eps, d=args.d, q=args.q, schedule=args.schedule,
-                        oocore=args.oocore_chain, oocore_dir=args.oocore_dir)
+                        oocore=args.oocore_chain, oocore_dir=args.oocore_dir,
+                        prefetch_depth=args.prefetch_depth,
+                        tile_codec=args.tile_codec, solver_batch=args.solver_batch)
 
     if args.dataset == "gmm":
         n_nodes = args.n
@@ -85,7 +106,9 @@ def main():
         # meta fingerprints the generator so a reused directory with stale
         # content (different dataset/params) is rejected, not silently scored.
         meta = {"dataset": args.dataset, "n": n_nodes, "seed": 0}
-        store = TileStore.create(args.store, n=n_nodes, grid=grid, meta=meta)
+        store = TileStore.create(
+            args.store, n=n_nodes, grid=grid, codec=args.tile_codec, meta=meta
+        )
         ids = store_snapshot_sequence(store, seq)
         reset_stream_stats()
         res = det.run(store.snapshot(sid) for sid in ids)
@@ -95,10 +118,13 @@ def main():
         # the line accordingly rather than misattributing one to the other.
         what = "adjacency + chain scratch" if args.oocore_chain else "adjacency"
         print(
-            f"[caddelag] store={args.store} grid={grid}x{grid}: "
-            f"{args.t_steps} snapshots, {args.t_steps * store.snapshot_nbytes / 1e6:.1f} MB on disk; "
-            f"streamed {st.bytes_h2d / 1e6:.1f} MB ({what}) in {st.panels} panels, "
-            f"peak device panel residency {st.peak_live_bytes / 1e6:.2f} MB"
+            f"[caddelag] store={args.store} grid={grid}x{grid} "
+            f"codec={store.manifest.codec} prefetch={args.prefetch_depth}: "
+            f"{args.t_steps} snapshots, {args.t_steps * store.snapshot_nbytes / 1e6:.1f} MB logical; "
+            f"read {st.bytes_read / 1e6:.1f} MB from store, decoded "
+            f"{st.bytes_decoded / 1e6:.1f} MB, streamed {st.bytes_h2d / 1e6:.1f} MB "
+            f"H2D ({what}) in {st.panels} panels, peak device panel residency "
+            f"{st.peak_live_bytes / 1e6:.2f} MB"
         )
     else:
         reset_stream_stats()
@@ -108,8 +134,10 @@ def main():
         extra = " (incl. adjacency streaming)" if args.store is not None else ""
         print(
             f"[caddelag] oocore chain: working matrices spilled to "
-            f"{args.oocore_dir or 'host RAM'}; {st.panels} panels{extra}, "
-            f"{st.bytes_h2d / 1e6:.1f} MB H2D, peak device panel residency "
+            f"{args.oocore_dir or 'host RAM'} (codec={effective_codec}, "
+            f"solver_batch={args.solver_batch}); {st.panels} panels{extra}, "
+            f"{st.bytes_read / 1e6:.1f} MB scratch reads, {st.bytes_h2d / 1e6:.1f} MB "
+            f"H2D, peak device panel residency "
             f"{st.peak_live_bytes / 1e6:.2f} MB (vs ~{5 * n_nodes * n_nodes * 4 / 1e6:.2f} MB "
             f"resident chain working set)"
         )

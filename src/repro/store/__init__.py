@@ -3,18 +3,34 @@
 Public API re-exports.
 """
 
+from repro.store.pipeline import (
+    DEFAULT_PREFETCH_DEPTH,
+    CachingHandle,
+    PanelPipeline,
+    fetch_panel_info,
+)
 from repro.store.tilestore import (
+    CODECS,
     MANIFEST_NAME,
     SnapshotHandle,
     SnapshotWriter,
     StoreManifest,
+    TileCodec,
     TileStore,
+    resolve_codec,
 )
 
 __all__ = [
+    "CODECS",
+    "CachingHandle",
+    "DEFAULT_PREFETCH_DEPTH",
     "MANIFEST_NAME",
+    "PanelPipeline",
     "SnapshotHandle",
     "SnapshotWriter",
     "StoreManifest",
+    "TileCodec",
     "TileStore",
+    "fetch_panel_info",
+    "resolve_codec",
 ]

@@ -1,0 +1,342 @@
+"""Unified panel I/O pipeline: all host->device staging for streamed panels.
+
+Every out-of-core consumer in the core used to own a slice of this logic --
+``tile_stream`` hand-rolled a depth-2 double buffer, the oochain GEMM fetched
+panels sequentially with no prefetch at all, and the fuse_l chain build did
+its own ``device_put`` loop.  :class:`PanelPipeline` owns the pattern once:
+
+* a **background prefetch thread** walks the requested row-panel origins,
+  fetching (and codec-decoding -- see :mod:`repro.store.tilestore`) each
+  streamed operand's panel on the host, so disk reads and decompression
+  overlap device compute;
+* **per-operand ring buffers** of configurable depth (default
+  ``DEFAULT_PREFETCH_DEPTH`` = 2) bound host staging and give backpressure --
+  a slow consumer can never be buried under prefetched panels;
+* the consumer-side iterator **stages panels onto devices one origin ahead**
+  (the ``device_put`` of panel t+1 is issued before compute on panel t is
+  dispatched), preserving the two-panels-per-operand device residency bound
+  the streaming executors advertise regardless of the host-side depth;
+* **cancellation on early exit**: closing the pipeline (or breaking out of
+  the iterator) stops the producer promptly and releases the rings;
+* **stats integration**: panels, H2D bytes and peak live device bytes are
+  accounted exactly as the old double buffer did, plus the pre-/post-codec
+  ``bytes_read`` / ``bytes_decoded`` pair, so ``stream_stats()`` tracks real
+  backing-tier traffic.
+
+Resident ``jax.Array`` operands are *not* routed through the thread: slicing
+them is a device-side operation and jax dispatch stays on the consumer
+thread.  The producer touches only host objects (numpy, files, codecs).
+
+:class:`CachingHandle` is the iteration-batching companion: it wraps a
+snapshot handle with a host-RAM panel cache so a consumer that re-streams the
+same matrix (the Richardson solver re-reading P2 every iteration) hits the
+backing store once per batch instead of once per pass -- replayed panels are
+bitwise identical and report zero ``bytes_read``.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Iterator, Sequence
+
+import numpy as np
+
+DEFAULT_PREFETCH_DEPTH = 2
+
+# Several pipelines may feed one consumer (the oochain GEMM runs a left and a
+# right pipeline at once), and their producer threads share one StreamStats --
+# guard the read/decode counters so concurrent `+=` can't drop updates.
+_STATS_LOCK = threading.Lock()
+
+
+def _is_handle(x) -> bool:
+    """Streamable snapshot handle (duck-typed, mirrors tiles.is_streamable)."""
+    return hasattr(x, "read_panel") and hasattr(x, "panel_rows")
+
+
+def fetch_panel_info(source, row0: int, height: int) -> tuple[np.ndarray, int]:
+    """``(host_panel, stored_nbytes)`` for any panel source.
+
+    Handles report their true pre-decode byte count via ``read_panel_info``
+    (zero on a :class:`CachingHandle` hit); plain arrays fall back to the
+    panel's own size.
+    """
+    if hasattr(source, "read_panel_info"):
+        panel, stored = source.read_panel_info(row0, height)
+        return np.asarray(panel), int(stored)
+    if _is_handle(source):
+        panel = np.asarray(source.read_panel(row0, height))
+        return panel, panel.nbytes
+    panel = np.asarray(source[row0 : row0 + height])
+    return panel, panel.nbytes
+
+
+class _Ring:
+    """Bounded single-producer/single-consumer ring buffer (one per operand)."""
+
+    def __init__(self, depth: int):
+        if depth < 1:
+            raise ValueError(f"ring depth must be >= 1, got {depth}")
+        self.depth = depth
+        self._buf: deque = deque()
+        self._cv = threading.Condition()
+        self._closed = False
+
+    def put(self, item) -> bool:
+        """Block until a slot frees; False once the ring is closed."""
+        with self._cv:
+            while len(self._buf) >= self.depth and not self._closed:
+                self._cv.wait()
+            if self._closed:
+                return False
+            self._buf.append(item)
+            self._cv.notify_all()
+            return True
+
+    def get(self):
+        """Next item, blocking; None once closed (drained items still served)."""
+        with self._cv:
+            while not self._buf and not self._closed:
+                self._cv.wait()
+            if self._buf:
+                item = self._buf.popleft()
+                self._cv.notify_all()
+                return item
+            return None
+
+    def close(self, *, drain: bool = False) -> None:
+        """Stop accepting puts.  ``drain=True`` (producer-error path) keeps
+        already-buffered panels poppable, so the consumer still receives
+        everything fetched before the fault; ``drain=False`` (consumer
+        cancellation) discards them -- nobody will pop."""
+        with self._cv:
+            self._closed = True
+            if not drain:
+                self._buf.clear()
+            self._cv.notify_all()
+
+
+class PanelPipeline:
+    """Prefetching iterator over row panels of one or more operands.
+
+    Yields ``(row0, panels)`` per origin, in origin order, where ``panels``
+    holds one entry per operand.  Operands satisfying the snapshot-handle
+    protocol are fetched (and decoded) in the background thread; anything
+    else (resident ``jax.Array`` / host array) is sliced lazily on the
+    consumer thread, keeping all jax dispatch off the producer.
+
+    ``sharding=None`` yields host panels (the out-of-core GEMM wants the left
+    panel on the host for block slicing); with a sharding, each streamed
+    panel is ``device_put`` one origin ahead of consumption and the H2D /
+    residency counters on ``stats`` are updated exactly as the retired
+    double-buffer did.
+
+    Use as a context manager (or call :meth:`close`) so an early exit --
+    consumer exception, solver convergence, test breakage -- cancels the
+    producer instead of leaving it blocked on a full ring.
+    """
+
+    def __init__(
+        self,
+        sources: Sequence,
+        origins: Sequence[int],
+        height: int,
+        *,
+        depth: int | None = None,
+        sharding=None,
+        stats=None,
+        device_put=None,
+    ):
+        self.sources = list(sources)
+        self.origins = list(origins)
+        self.height = int(height)
+        self.depth = DEFAULT_PREFETCH_DEPTH if depth is None else int(depth)
+        if self.depth < 1:
+            raise ValueError(f"prefetch depth must be >= 1, got {self.depth}")
+        self.sharding = sharding
+        self.stats = stats
+        self._device_put = device_put
+        self._threaded = [_is_handle(s) for s in self.sources]
+        self._rings = [
+            _Ring(self.depth) if threaded else None for threaded in self._threaded
+        ]
+        self._cancel = threading.Event()
+        self._error: BaseException | None = None
+        self._thread: threading.Thread | None = None
+        self.device_live_bytes = 0  # executor-owned panel bytes currently staged
+        if any(self._threaded) and self.origins:
+            self._thread = threading.Thread(
+                target=self._produce, name="panel-prefetch", daemon=True
+            )
+            self._thread.start()
+
+    # -- producer (background thread: host I/O + codec decode only) ----------
+
+    def _produce(self) -> None:
+        try:
+            for row0 in self.origins:
+                for src, ring in zip(self.sources, self._rings):
+                    if ring is None:
+                        continue
+                    if self._cancel.is_set():
+                        return
+                    panel, stored = fetch_panel_info(src, row0, self.height)
+                    if self.stats is not None and stored:
+                        # stored == 0 means a host-RAM replay (CachingHandle
+                        # hit): no backing-tier read, no decode performed.
+                        with _STATS_LOCK:
+                            self.stats.bytes_read += stored
+                            self.stats.bytes_decoded += panel.nbytes
+                    if not ring.put(panel):
+                        return  # closed under us: cancelled
+        except BaseException as e:  # propagate to the consumer, then stop
+            self._error = e
+            self._cancel.set()
+            for ring in self._rings:
+                if ring is not None:
+                    ring.close(drain=True)  # serve what was fetched pre-fault
+
+    # -- consumer ------------------------------------------------------------
+
+    def _next_host_bundle(self, row0: int) -> list:
+        """Panels for one origin: ring pops for handles, lazy slices else."""
+        bundle = []
+        for src, ring in zip(self.sources, self._rings):
+            if ring is None:
+                bundle.append(src[row0 : row0 + self.height])
+                continue
+            panel = ring.get()
+            if panel is None:
+                if self._error is not None:
+                    raise RuntimeError(
+                        f"panel prefetch failed at row {row0}"
+                    ) from self._error
+                raise RuntimeError("panel pipeline closed while panels were pending")
+            bundle.append(panel)
+        return bundle
+
+    def _stage(self, row0: int) -> tuple[int, list, int]:
+        """Fetch/pop one origin's bundle and (optionally) put it on device."""
+        bundle = self._next_host_bundle(row0)
+        if self.sharding is None:
+            return row0, bundle, 0
+        staged, nbytes = [], 0
+        put = self._device_put
+        for panel, threaded in zip(bundle, self._threaded):
+            if threaded:
+                dev = put(np.ascontiguousarray(panel), self.sharding)
+                nbytes += dev.nbytes
+                if self.stats is not None:
+                    self.stats.panels += 1
+                    self.stats.bytes_h2d += dev.nbytes
+                staged.append(dev)
+            else:
+                staged.append(panel)  # already device-resident; sliced lazily
+        return row0, staged, nbytes
+
+    def __iter__(self) -> Iterator[tuple[int, list]]:
+        if self._device_put is None and self.sharding is not None:
+            import jax  # deferred so host-mode pipelines never touch jax
+
+            self._device_put = jax.device_put
+        try:
+            if not self.origins:
+                return
+            if self.sharding is None:
+                for row0 in self.origins:
+                    yield row0, self._next_host_bundle(row0)
+                return
+            # Device mode: stage origin t+1 before yielding origin t, so the
+            # H2D copy overlaps the compute the consumer dispatches on t.
+            prev_row0, prev, prev_bytes = self._stage(self.origins[0])
+            for row0 in self.origins[1:]:
+                _, cur, cur_bytes = self._stage(row0)
+                self.device_live_bytes = prev_bytes + cur_bytes
+                if self.stats is not None:
+                    self.stats._note_live(self.device_live_bytes)
+                yield prev_row0, prev
+                prev_row0, prev, prev_bytes = row0, cur, cur_bytes
+            self.device_live_bytes = prev_bytes
+            if self.stats is not None:
+                self.stats._note_live(prev_bytes)
+            yield prev_row0, prev
+            self.device_live_bytes = 0
+        finally:
+            self.close()
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self) -> None:
+        """Cancel the producer and release the rings (idempotent)."""
+        self._cancel.set()
+        for ring in self._rings:
+            if ring is not None:
+                ring.close()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    def __enter__(self) -> "PanelPipeline":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+
+class CachingHandle:
+    """Snapshot-handle wrapper with a host-RAM panel cache (solver batching).
+
+    The Richardson solver re-streams P2 (n^2 bytes) from the scratch store on
+    every iteration; wrapping the handle in a :class:`CachingHandle` makes
+    iteration batches read the store once and replay the decoded panels from
+    host RAM -- bitwise identical panels, ``bytes_read`` counted only on the
+    filling pass.  :meth:`refresh` drops the cache (the start of the next
+    batch streams from the store again).
+
+    Host cost: up to one full decoded matrix (n^2 x itemsize) while the cache
+    is warm -- the premise of a disk-backed scratch is exactly that host RAM
+    is the roomier tier.
+    """
+
+    def __init__(self, handle):
+        if not _is_handle(handle):
+            raise TypeError(f"{handle!r} does not satisfy the snapshot-handle protocol")
+        self.handle = handle
+        self._cache: dict[tuple[int, int], np.ndarray] = {}
+        self.fills = 0  # store reads (cache misses)
+        self.replays = 0  # cache hits
+
+    @property
+    def shape(self):
+        return self.handle.shape
+
+    @property
+    def dtype(self):
+        return self.handle.dtype
+
+    @property
+    def nbytes(self):
+        return self.handle.nbytes
+
+    @property
+    def panel_rows(self) -> int:
+        return self.handle.panel_rows
+
+    def refresh(self) -> None:
+        """Drop cached panels; the next pass streams from the store again."""
+        self._cache.clear()
+
+    def read_panel_info(self, row0: int, height: int) -> tuple[np.ndarray, int]:
+        key = (row0, height)
+        cached = self._cache.get(key)
+        if cached is not None:
+            self.replays += 1
+            return cached, 0  # zero backing-store bytes: a host-RAM replay
+        panel, stored = fetch_panel_info(self.handle, row0, height)
+        self._cache[key] = panel
+        self.fills += 1
+        return panel, stored
+
+    def read_panel(self, row0: int, height: int) -> np.ndarray:
+        return self.read_panel_info(row0, height)[0]

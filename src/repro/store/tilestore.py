@@ -30,6 +30,8 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import threading
+import warnings
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Callable, Iterator
@@ -40,8 +42,181 @@ MANIFEST_NAME = "manifest.json"
 _FORMAT_VERSION = 1
 
 
-def _tile_name(r: int, c: int) -> str:
-    return f"tile_{r:04d}_{c:04d}.npy"
+# ---------------------------------------------------------------------------
+# tile codecs: encode-on-write, decode-on-read
+# ---------------------------------------------------------------------------
+#
+# Dense similarity tiles compress well, and out-of-core runs are disk-
+# bandwidth-bound (an oocore chain writes ~2 d n^2 scratch bytes per build),
+# so the store trades decode CPU for bytes on the capacity tier.  Decoding
+# happens wherever ``read_tile`` runs -- for the streaming executors that is
+# the PanelPipeline's prefetch thread, so decompression overlaps device
+# compute.  The codec is part of the manifest fingerprint: a directory can
+# hold tiles of exactly one codec, and re-creating it under a different codec
+# errors loudly instead of mixing encodings.
+
+
+def _f32_to_bf16_u16(a: np.ndarray) -> np.ndarray:
+    """fp32 -> bf16 bit pattern (uint16), round-to-nearest-even."""
+    try:
+        from ml_dtypes import bfloat16  # jax dependency; RNE casts
+
+        return np.asarray(a, dtype=bfloat16).view(np.uint16)
+    except ImportError:  # pure-numpy fallback (no NaN payloads expected)
+        bits = np.ascontiguousarray(a, dtype=np.float32).view(np.uint32).astype(np.uint64)
+        return ((bits + 0x7FFF + ((bits >> 16) & 1)) >> 16).astype(np.uint16)
+
+
+def _bf16_u16_to_f32(u: np.ndarray) -> np.ndarray:
+    """bf16 bit pattern (uint16) -> fp32 (exact widening)."""
+    return (np.asarray(u, dtype=np.uint32) << 16).view(np.float32)
+
+
+def _zstd_backend():
+    """The installed zstd implementation, or None (optional dependency)."""
+    try:
+        import zstandard
+
+        return zstandard
+    except ImportError:
+        pass
+    try:
+        import zstd
+
+        return zstd
+    except ImportError:
+        return None
+
+
+class TileCodec:
+    """Storage encoding of one tile.  ``encode`` maps a logical-dtype block to
+    its stored form (an ndarray for .npy-backed codecs, bytes for compressed
+    ones); ``decode`` inverts it.  ``stored_nbytes`` is what the backing tier
+    actually holds -- the pre-decode number the bytes-read counters report."""
+
+    name: str
+    suffix: str  # tile filename suffix (codec-specific: mixed dirs can't alias)
+
+    def encode(self, block: np.ndarray):
+        raise NotImplementedError
+
+    def decode(self, stored, tile_rows: int, dtype: np.dtype) -> np.ndarray:
+        raise NotImplementedError
+
+    def stored_nbytes(self, stored) -> int:
+        return len(stored) if isinstance(stored, (bytes, bytearray)) else stored.nbytes
+
+
+class RawCodec(TileCodec):
+    """Tiles stored verbatim (.npy, mmap-able).  Bitwise round-trip."""
+
+    name, suffix = "raw", ".npy"
+
+    def encode(self, block: np.ndarray) -> np.ndarray:
+        return block
+
+    def decode(self, stored, tile_rows: int, dtype: np.dtype) -> np.ndarray:
+        return np.asarray(stored)
+
+
+class Bf16Codec(TileCodec):
+    """fp32 tiles stored as bf16 bit patterns (uint16 .npy): half the bytes.
+
+    Accuracy contract: decode(encode(x)) == bf16-round(x) -- a one-time
+    relative error <= 2^-8 ~= 4e-3 applied at write time; everything computed
+    *from* the stored tiles is exact with respect to the rounded values.
+    float32 stores only: silently squeezing a wider dtype through an 8-bit
+    mantissa would break the store's errors-loudly contract
+    (:class:`TileStore` rejects the combination at construction)."""
+
+    name, suffix = "bf16", ".npy"
+
+    def encode(self, block: np.ndarray) -> np.ndarray:
+        return _f32_to_bf16_u16(block)
+
+    def decode(self, stored, tile_rows: int, dtype: np.dtype) -> np.ndarray:
+        u = np.asarray(stored)
+        if u.dtype != np.uint16:
+            raise ValueError(f"bf16 tile stored as {u.dtype}, want uint16")
+        return _bf16_u16_to_f32(u).astype(dtype, copy=False)
+
+
+class ZstdCodec(TileCodec):
+    """Tiles zstd-compressed (lossless; raw C-order buffer per tile).
+
+    The backend (``zstandard`` or ``zstd``) is an optional import --
+    :func:`resolve_codec` falls back to ``raw`` with a warning when neither is
+    installed, and opening an existing zstd store without a backend raises."""
+
+    name, suffix = "zstd", ".zst"
+
+    def __init__(self):
+        self._z = _zstd_backend()
+        if self._z is None:
+            raise ImportError(
+                "zstd codec requires the 'zstandard' (or 'zstd') package; "
+                "install one or use codec='raw'/'bf16'"
+            )
+        # zstandard contexts are reusable (the documented fast path) but not
+        # safe under concurrent calls, and decode runs in prefetch threads --
+        # several at once when a GEMM streams two operands.  Thread-locals
+        # give each thread one long-lived compressor/decompressor pair.
+        self._local = threading.local()
+
+    def _ctxs(self):
+        if not hasattr(self._local, "comp"):
+            if hasattr(self._z, "ZstdCompressor"):  # zstandard
+                self._local.comp = self._z.ZstdCompressor()
+                self._local.decomp = self._z.ZstdDecompressor()
+            else:  # the 'zstd' module is plain functions
+                self._local.comp = self._local.decomp = None
+        return self._local.comp, self._local.decomp
+
+    def encode(self, block: np.ndarray) -> bytes:
+        buf = np.ascontiguousarray(block).tobytes()
+        comp, _ = self._ctxs()
+        return comp.compress(buf) if comp is not None else self._z.compress(buf)
+
+    def decode(self, stored, tile_rows: int, dtype: np.dtype) -> np.ndarray:
+        _, decomp = self._ctxs()
+        if decomp is not None:
+            buf = decomp.decompress(bytes(stored))
+        else:
+            buf = self._z.decompress(bytes(stored))
+        want = tile_rows * tile_rows * dtype.itemsize
+        if len(buf) != want:
+            raise ValueError(f"zstd tile decompressed to {len(buf)} bytes, want {want}")
+        return np.frombuffer(buf, dtype=dtype).reshape(tile_rows, tile_rows)
+
+
+CODECS = ("raw", "bf16", "zstd")
+
+
+def resolve_codec(name: str, *, fallback: bool = True) -> TileCodec:
+    """Codec instance for ``name``.
+
+    ``fallback=True`` (writer path) degrades a backend-less ``zstd`` request
+    to ``raw`` with a warning, so zstd-less environments run cleanly;
+    ``fallback=False`` (reader path) raises instead -- an existing zstd store
+    cannot be silently reinterpreted.
+    """
+    if name == "raw":
+        return RawCodec()
+    if name == "bf16":
+        return Bf16Codec()
+    if name == "zstd":
+        try:
+            return ZstdCodec()
+        except ImportError:
+            if not fallback:
+                raise
+            warnings.warn(
+                "zstd backend not installed; falling back to codec='raw' "
+                "(install 'zstandard' for compressed tiles)",
+                stacklevel=3,
+            )
+            return RawCodec()
+    raise ValueError(f"unknown tile codec {name!r}; want one of {CODECS}")
 
 
 @dataclass
@@ -52,12 +227,15 @@ class StoreManifest:
     generator params ...).  Re-creating a store whose geometry matches but
     whose meta differs is rejected -- without it, a resumed write would
     silently skip committed ids and serve stale snapshots from a previous,
-    differently-parameterized run.
+    differently-parameterized run.  ``codec`` names the storage encoding of
+    every tile in the directory and is part of the same fingerprint: one
+    store, one codec -- mixed-codec dirs error loudly.
     """
 
     n: int
     grid: int  # tiles per side; tile shape is (n/grid, n/grid)
     dtype: str
+    codec: str = "raw"
     snapshots: list[str] = field(default_factory=list)
     meta: dict = field(default_factory=dict)
     version: int = _FORMAT_VERSION
@@ -79,6 +257,7 @@ class StoreManifest:
                 "n": self.n,
                 "grid": self.grid,
                 "dtype": self.dtype,
+                "codec": self.codec,
                 "snapshots": list(self.snapshots),
                 "meta": dict(self.meta),
             },
@@ -94,6 +273,7 @@ class StoreManifest:
             n=int(d["n"]),
             grid=int(d["grid"]),
             dtype=str(d["dtype"]),
+            codec=str(d.get("codec", "raw")),  # pre-codec manifests are raw
             snapshots=[str(s) for s in d.get("snapshots", [])],
             meta=dict(d.get("meta", {})),
             version=int(d.get("version", _FORMAT_VERSION)),
@@ -122,6 +302,14 @@ class TileStore:
         self.manifest = manifest
         self.root = Path(root) if root is not None else None
         self._ram: dict[tuple[str, int, int], np.ndarray] = {}
+        # Readers must not reinterpret existing tiles: no fallback here.
+        self.codec = resolve_codec(manifest.codec, fallback=False)
+        if self.codec.name == "bf16" and np.dtype(manifest.dtype) != np.float32:
+            raise ValueError(
+                f"bf16 codec stores float32 tiles only, not {manifest.dtype} "
+                "(an 8-bit mantissa would silently destroy wider precision); "
+                "use codec='raw' or 'zstd'"
+            )
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -133,6 +321,7 @@ class TileStore:
         n: int,
         grid: int,
         dtype="float32",
+        codec: str = "raw",
         meta: dict | None = None,
     ) -> "TileStore":
         """New store at ``root`` (made if missing); ``root=None`` = RAM-backed.
@@ -140,19 +329,32 @@ class TileStore:
         ``meta`` fingerprints the content (dataset, seed, params).  Resuming
         an existing store requires matching geometry AND matching meta, so
         committed snapshots from a differently-parameterized run can't be
-        silently served as this run's data.
+        silently served as this run's data.  ``codec`` selects the tile
+        storage encoding (``raw`` / ``bf16`` / ``zstd``); it joins the
+        geometry fingerprint, so resuming under a different codec errors
+        rather than mixing encodings in one directory (a backend-less
+        ``zstd`` request falls back to ``raw`` with a warning *before* the
+        fingerprint is formed, so the manifest always records what the tiles
+        actually are).
         """
-        manifest = StoreManifest(n=n, grid=grid, dtype=np.dtype(dtype).name, meta=dict(meta or {}))
+        codec_name = resolve_codec(codec).name  # fallback resolves pre-fingerprint
+        manifest = StoreManifest(
+            n=n, grid=grid, dtype=np.dtype(dtype).name, codec=codec_name,
+            meta=dict(meta or {}),
+        )
         store = cls(manifest, root)
         if store.root is not None:
             store.root.mkdir(parents=True, exist_ok=True)
             existing = store.root / MANIFEST_NAME
             if existing.exists():
                 old = StoreManifest.from_json(existing.read_text())
-                if (old.n, old.grid, old.dtype) != (n, grid, manifest.dtype):
+                if (old.n, old.grid, old.dtype, old.codec) != (
+                    n, grid, manifest.dtype, codec_name,
+                ):
                     raise ValueError(
                         f"store at {root} already exists with incompatible geometry "
-                        f"(n={old.n} grid={old.grid} dtype={old.dtype})"
+                        f"(n={old.n} grid={old.grid} dtype={old.dtype} "
+                        f"codec={old.codec}, requested codec={codec_name})"
                     )
                 if meta is not None and old.meta != manifest.meta:
                     # Adopting a meta is only safe while nothing is committed:
@@ -234,45 +436,75 @@ class TileStore:
 
     def _tile_path(self, snap_id: str, r: int, c: int) -> Path:
         assert self.root is not None
-        return self.root / snap_id / _tile_name(r, c)
+        return self.root / snap_id / f"tile_{r:04d}_{c:04d}{self.codec.suffix}"
 
     def has_tile(self, snap_id: str, r: int, c: int) -> bool:
         if self.root is None:
             return (snap_id, r, c) in self._ram
         return self._tile_path(snap_id, r, c).exists()
 
-    def read_tile(self, snap_id: str, r: int, c: int, *, mmap: bool = True) -> np.ndarray:
-        """One (tile_rows, tile_rows) dense tile; disk tiles are memmapped."""
-        g = self.grid
-        if not (0 <= r < g and 0 <= c < g):
-            raise IndexError(f"tile ({r}, {c}) outside {g}x{g} grid")
+    def _load_stored(self, snap_id: str, r: int, c: int, *, mmap: bool = True):
+        """The stored (encoded) form of one tile: ndarray or bytes."""
         if self.root is None:
             return self._ram[(snap_id, r, c)]
         path = self._tile_path(snap_id, r, c)
-        arr = np.load(path, mmap_mode="r" if mmap else None)
+        if self.codec.suffix == ".npy":
+            return np.load(path, mmap_mode="r" if mmap else None)
+        return path.read_bytes()
+
+    def read_tile(self, snap_id: str, r: int, c: int, *, mmap: bool = True) -> np.ndarray:
+        """One (tile_rows, tile_rows) dense *decoded* tile.
+
+        Disk tiles of .npy-backed codecs are memmapped before decode; decode
+        runs wherever the caller runs -- the streaming executors call this
+        from the PanelPipeline prefetch thread, so decompression overlaps
+        device compute.
+        """
+        g = self.grid
+        if not (0 <= r < g and 0 <= c < g):
+            raise IndexError(f"tile ({r}, {c}) outside {g}x{g} grid")
         tr = self.tile_rows
+        arr = self.codec.decode(
+            self._load_stored(snap_id, r, c, mmap=mmap), tr, self.dtype
+        )
         if arr.shape != (tr, tr) or arr.dtype != self.dtype:
             raise ValueError(
-                f"{path}: tile is {arr.shape}/{arr.dtype}, manifest says ({tr}, {tr})/{self.dtype}"
+                f"tile ({r}, {c}) of {snap_id!r} decodes to {arr.shape}/{arr.dtype}, "
+                f"manifest says ({tr}, {tr})/{self.dtype}"
             )
         return arr
+
+    def tile_nbytes_stored(self, snap_id: str, r: int, c: int) -> int:
+        """Bytes the backing tier holds for one tile (pre-decode)."""
+        if self.root is None:
+            return self.codec.stored_nbytes(self._ram[(snap_id, r, c)])
+        path = self._tile_path(snap_id, r, c)
+        # .npy files carry a small header; the payload size is what matters
+        # for bandwidth accounting, so use the file size as-is.
+        return path.stat().st_size
 
     def _store_tile(self, snap_id: str, r: int, c: int, block: np.ndarray) -> None:
         tr = self.tile_rows
         block = np.ascontiguousarray(np.asarray(block, dtype=self.dtype))
         if block.shape != (tr, tr):
             raise ValueError(f"tile ({r}, {c}) has shape {block.shape}, want ({tr}, {tr})")
+        stored = self.codec.encode(block)
         if self.root is None:
-            # Always copy: ascontiguousarray passes an already-contiguous
-            # caller array through, and a stored view would track later
-            # caller mutation instead of the put-time snapshot.
-            self._ram[(snap_id, r, c)] = np.array(block, copy=True)
+            # Always copy ndarray-encoded tiles: raw encode passes the caller's
+            # array through, and a stored view would track later caller
+            # mutation instead of the put-time snapshot.
+            self._ram[(snap_id, r, c)] = (
+                stored if isinstance(stored, bytes) else np.array(stored, copy=True)
+            )
             return
         path = self._tile_path(snap_id, r, c)
         path.parent.mkdir(parents=True, exist_ok=True)
-        tmp = path.with_suffix(".npy.tmp")
+        tmp = path.with_name(path.name + ".tmp")
         with open(tmp, "wb") as f:
-            np.save(f, block)
+            if isinstance(stored, bytes):
+                f.write(stored)
+            else:
+                np.save(f, stored)
         os.replace(tmp, path)  # atomic: a crash leaves either old or new, never torn
 
     # -- writers -------------------------------------------------------------
@@ -466,6 +698,20 @@ class SnapshotHandle:
             for r in range(r_lo, r_hi)
         ]
         return rows[0] if len(rows) == 1 else np.concatenate(rows, axis=0)
+
+    def read_panel_info(self, row0: int, height: int) -> tuple[np.ndarray, int]:
+        """``(panel, stored_nbytes)``: the decoded panel plus the pre-decode
+        bytes the backing tier served for it -- the pair the streaming
+        pipeline's bytes-read / bytes-decoded counters are built from."""
+        panel = self.read_panel(row0, height)
+        tr = self.store.tile_rows
+        g = self.store.grid
+        stored = sum(
+            self.store.tile_nbytes_stored(self.snap_id, r, c)
+            for r in range(row0 // tr, (row0 + height) // tr)
+            for c in range(g)
+        )
+        return panel, stored
 
     def to_numpy(self) -> np.ndarray:
         """Gather the whole snapshot (tests / small graphs only)."""

@@ -55,6 +55,39 @@ def test_sequence_global_topk(ctx1):
     )
 
 
+def test_global_topk_merge_partially_replicated(ctx22):
+    """Regression (jax 0.4.x partial-replication bug, ROADMAP): the streaming
+    top-k merge must be correct even when the per-transition candidates are
+    sharded P(row_axes) -- *partially replicated* over the column mesh axes.
+    The former eager jnp.concatenate merge SUMMED the replicas on such inputs
+    (every candidate doubled on a 2x2 mesh); the host-side merge cannot."""
+    import jax
+
+    det = SequenceDetector(ctx22, CFG, top_k=4)
+    sh = ctx22.sharding(ctx22.vector_spec)
+
+    def put(vals, dtype):
+        return jax.device_put(np.asarray(vals, dtype), sh)
+
+    det._merge_topk(put([0, 1, 2, 3], np.int32), put([4.0, 3.0, 2.0, 1.0], np.float32), 0)
+    det._merge_topk(put([7, 8, 9, 10], np.int32), put([5.0, 3.0, 0.5, 0.25], np.float32), 1)
+    np.testing.assert_array_equal(np.asarray(det._g_val), [5.0, 4.0, 3.0, 3.0])
+    np.testing.assert_array_equal(np.asarray(det._g_idx), [7, 0, 1, 8])
+    # lax.top_k tie semantics: equal values keep candidate order (step 0 first)
+    np.testing.assert_array_equal(np.asarray(det._g_step), [1, 0, 0, 1])
+
+
+def test_global_topk_sharded_matches_host(ctx22):
+    """End-to-end on the multi-axis mesh: the merged global top-k equals a
+    host-side top-k over all transition scores."""
+    res = detect_sequence_anomalies(
+        ctx22, gmm_snapshot_sequence(ctx22, 64, 3, seed=6).snapshots(), CFG, top_k=6
+    )
+    allsc = np.stack([np.asarray(r.scores) for r in res.transitions])
+    want = np.sort(allsc.ravel())[::-1][:6]
+    np.testing.assert_array_equal(np.sort(np.asarray(res.global_top_val))[::-1], want)
+
+
 def test_sequence_sharded_matches_single(ctx1, ctx22):
     r1 = detect_sequence_anomalies(
         ctx1, gmm_snapshot_sequence(ctx1, 64, 3, seed=3).snapshots(), CFG, top_k=5

@@ -295,6 +295,158 @@ def test_oocore_chain_sequence_retires_scratch(ctx1, tmp_path):
     assert len(TileStore.open(scratch).snapshot_ids) == 2
 
 
+# ---------------------------------------------------------------------------
+# tile codecs: round-trip, fingerprint, accuracy contracts
+# ---------------------------------------------------------------------------
+
+
+def test_bf16_codec_roundtrip_halves_stored_bytes(tmp_path):
+    from repro.store.tilestore import _bf16_u16_to_f32, _f32_to_bf16_u16
+
+    n = 32
+    a = _sym(n, 60)
+    want = _bf16_u16_to_f32(_f32_to_bf16_u16(a))  # bf16-rounded values
+    store = TileStore.create(tmp_path / "s", n=n, grid=1, codec="bf16")
+    h = store.put_snapshot("t", a)
+    np.testing.assert_array_equal(h.to_numpy(), want)
+    # the rounding is the documented contract: relative error <= 2^-8
+    np.testing.assert_allclose(want, a, rtol=2 ** -8, atol=1e-7)
+    # stored bytes are half the logical bytes (modulo .npy headers)
+    _, stored = h.read_panel_info(0, n)
+    assert stored < 0.6 * n * n * 4
+    # survives reopen (codec comes from the manifest, not the caller)
+    np.testing.assert_array_equal(TileStore.open(tmp_path / "s").snapshot("t").to_numpy(), want)
+
+
+def test_codec_joins_geometry_fingerprint(tmp_path):
+    TileStore.create(tmp_path / "s", n=32, grid=4, codec="bf16")
+    with pytest.raises(ValueError, match="codec"):
+        TileStore.create(tmp_path / "s", n=32, grid=4)  # raw != bf16: loud error
+    with pytest.raises(ValueError, match="unknown tile codec"):
+        TileStore.create(tmp_path / "x", n=32, grid=4, codec="lz77")
+    # bf16 squeezes an 8-bit mantissa: wider store dtypes must error loudly
+    with pytest.raises(ValueError, match="float32"):
+        TileStore.create(tmp_path / "y", n=32, grid=4, dtype="float64", codec="bf16")
+
+
+def test_zstd_roundtrip_or_clean_fallback(tmp_path):
+    """With a zstd backend: lossless round-trip.  Without: create() falls back
+    to raw with a warning and the manifest records what the tiles really are."""
+    from repro.store.tilestore import _zstd_backend
+
+    a = _sym(32, 61)
+    if _zstd_backend() is None:
+        with pytest.warns(UserWarning, match="falling back"):
+            store = TileStore.create(tmp_path / "s", n=32, grid=2, codec="zstd")
+        assert store.manifest.codec == "raw"
+        h = store.put_snapshot("t", a)
+        np.testing.assert_array_equal(h.to_numpy(), a)
+    else:
+        store = TileStore.create(tmp_path / "s", n=32, grid=2, codec="zstd")
+        assert store.manifest.codec == "zstd"
+        h = store.put_snapshot("t", a)
+        np.testing.assert_array_equal(h.to_numpy(), a)  # zstd is lossless
+        _, stored = h.read_panel_info(0, 32)
+        assert stored != 32 * 32 * 4  # actually compressed
+
+
+def test_streamed_bf16_scores_bitwise_vs_resident_on_rounded(ctx1):
+    """The bf16 codec's accuracy contract: rounding happens once at write
+    time, and the streamed run is *bitwise* identical to a resident run on
+    the rounded adjacencies -- the codec never adds compute-path error."""
+    from repro.store.tilestore import _bf16_u16_to_f32, _f32_to_bf16_u16
+
+    n = 32
+    a1, a2 = _sym(n, 62), _sym(n, 63)
+    store = TileStore.create(None, n=n, grid=4, codec="bf16")
+    h1, h2 = store.put_snapshot("t0", a1), store.put_snapshot("t1", a2)
+    r1 = _bf16_u16_to_f32(_f32_to_bf16_u16(a1))
+    r2 = _bf16_u16_to_f32(_f32_to_bf16_u16(a2))
+
+    res_s = detect_anomalies(ctx1, h1, h2, CFG, top_k=5)
+    res_r = detect_anomalies(ctx1, ctx1.put_matrix(r1), ctx1.put_matrix(r2), CFG, top_k=5)
+    np.testing.assert_array_equal(np.asarray(res_s.scores), np.asarray(res_r.scores))
+
+
+def test_oocore_bf16_scratch_scores_close(ctx1):
+    """bf16 *scratch* rounds the working matrices at every level: looser
+    contract (documented in the README codec table), still anomaly-ranking
+    grade."""
+    n = 32
+    a1, a2 = _sym(n, 64), _sym(n, 65)
+    store = TileStore.create(None, n=n, grid=4)
+    h1, h2 = store.put_snapshot("t0", a1), store.put_snapshot("t1", a2)
+    cfg = CommuteConfig(
+        eps_rp=1e-2, d=3, q=3, schedule="xla", k_override=4,
+        oocore=True, tile_codec="bf16",
+    )
+    res_r = detect_anomalies(ctx1, ctx1.put_matrix(a1), ctx1.put_matrix(a2), CFG, top_k=5)
+    res_o = detect_anomalies(ctx1, h1, h2, cfg, top_k=5)
+    np.testing.assert_allclose(
+        np.asarray(res_o.scores), np.asarray(res_r.scores), rtol=5e-2, atol=5e-2
+    )
+
+
+# ---------------------------------------------------------------------------
+# iteration-batched Richardson: fewer scratch reads, identical scores
+# ---------------------------------------------------------------------------
+
+
+def test_solver_batch_cuts_scratch_reads_scores_allclose(ctx):
+    """Acceptance: solver_batch=4 drops solve-phase scratch reads >= 2x and
+    out-of-core scores stay allclose (rtol <= 1e-4) to resident, on the 1x1
+    and 2x2 meshes."""
+    from repro.core import chain_product, estimate_solution
+    from repro.core.embedding import edge_projection
+
+    n, d, q = 32, 3, 9
+    a1, a2 = _sym(n, 70), _sym(n, 71)
+    store = TileStore.create(None, n=n, grid=4)
+    h1, h2 = store.put_snapshot("t0", a1), store.put_snapshot("t1", a2)
+
+    # solve-phase traffic, measured directly on one operator
+    op = chain_product(ctx, h1, d, oocore=True)
+    y = edge_projection(ctx, h1, 0, 4)
+    reads, sols = {}, {}
+    for batch in (1, 4):
+        reset_stream_stats()
+        sols[batch] = np.asarray(estimate_solution(ctx, op, y, q, solver_batch=batch))
+        reads[batch] = stream_stats().bytes_read
+    op.release_scratch()
+    assert reads[1] >= 2 * reads[4]
+    # replayed panels are bitwise: batching cannot change the solution
+    np.testing.assert_array_equal(sols[1], sols[4])
+
+    # end-to-end: batched oocore detect stays allclose to resident
+    cfg_oo = CommuteConfig(
+        eps_rp=1e-2, d=3, q=3, schedule="xla", k_override=4,
+        oocore=True, solver_batch=4, prefetch_depth=4,
+    )
+    res_r = detect_anomalies(ctx, ctx.put_matrix(a1), ctx.put_matrix(a2), CFG, top_k=5)
+    res_o = detect_anomalies(ctx, h1, h2, cfg_oo, top_k=5)
+    np.testing.assert_allclose(
+        np.asarray(res_o.scores), np.asarray(res_r.scores), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_stream_stats_byte_counters_track_codec(ctx1):
+    """bytes_read (pre-codec) vs bytes_decoded (post-codec): raw moves them
+    together; bf16 reads roughly half of what it decodes."""
+    n = 32
+    a1, a2 = _sym(n, 72), _sym(n, 73)
+    ratios = {}
+    for codec in ("raw", "bf16"):
+        store = TileStore.create(None, n=n, grid=4, codec=codec)
+        h1, h2 = store.put_snapshot("t0", a1), store.put_snapshot("t1", a2)
+        reset_stream_stats()
+        detect_anomalies(ctx1, h1, h2, CFG, top_k=5)
+        st = stream_stats()
+        assert st.bytes_decoded > 0
+        ratios[codec] = st.bytes_read / st.bytes_decoded
+    assert ratios["raw"] == pytest.approx(1.0)  # RAM raw backend: no headers
+    assert ratios["bf16"] == pytest.approx(0.5)
+
+
 def test_out_of_core_writer_matches_resident_build(ctx1):
     """gmm_store_sequence (numpy, tile-by-tile) == similarity_graph (sharded)."""
     from repro.graphs import gmm_points, similarity_graph
