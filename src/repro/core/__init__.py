@@ -29,6 +29,7 @@ from repro.core.embedding import (
 )
 from repro.core.sequence import SequenceDetector, SequenceResult, detect_sequence_anomalies
 from repro.core.solver import estimate_solution, residual_norm
+from repro.core.solvers import SolveReport, SolverSpec, estimate_rho, solve
 from repro.core.tiles import (
     ProgramCacheStats,
     StreamStats,
@@ -56,6 +57,8 @@ __all__ = [
     "SCHEDULES",
     "SequenceDetector",
     "SequenceResult",
+    "SolveReport",
+    "SolverSpec",
     "StreamStats",
     "Tile",
     "build_from_nodes",
@@ -66,6 +69,7 @@ __all__ = [
     "detect_anomalies",
     "detect_sequence_anomalies",
     "edge_projection",
+    "estimate_rho",
     "estimate_solution",
     "exact_commute_distances",
     "is_streamable",
@@ -76,6 +80,7 @@ __all__ = [
     "reset_chain_build_count",
     "reset_stream_stats",
     "residual_norm",
+    "solve",
     "stream_stats",
     "tile_map",
     "tile_stream",

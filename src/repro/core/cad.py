@@ -107,6 +107,9 @@ class CADResult:
     scores: jax.Array  # (n,) node anomaly scores
     top_idx: jax.Array  # (k,)
     top_val: jax.Array  # (k,)
+    # Solver telemetry of the two endpoint embeddings (left, right); None
+    # entries when an embedding was built before reports existed / externally.
+    solve_reports: tuple = ()
 
 
 def detect_anomalies(
@@ -131,4 +134,7 @@ def detect_anomalies(
     for e in (e1, e2):
         if e.op is not None:
             e.op.release_scratch()
-    return CADResult(scores=scores, top_idx=idx, top_val=vals)
+    return CADResult(
+        scores=scores, top_idx=idx, top_val=vals,
+        solve_reports=(e1.report, e2.report),
+    )

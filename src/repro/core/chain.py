@@ -17,6 +17,7 @@ saving the materialization of L (a beyond-paper memory optimization).
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from functools import partial
 
@@ -54,10 +55,12 @@ class ChainOperator:
     ``p1`` / ``p2`` are resident sharded arrays, or store-backed snapshot
     handles when the operator was built out-of-core
     (:func:`repro.core.oochain.chain_product_oocore`) -- the solver streams
-    handle-backed operators per panel.  ``prefetch_depth`` rides along as
-    static metadata so every downstream consumer of a store-backed operator
-    (the solver's mat-vecs, scoring passes) stages panels with the depth the
-    build was configured for.
+    handle-backed operators per panel.  ``prefetch_depth`` and ``rho`` ride
+    along as static metadata: the staging depth every downstream consumer of
+    a store-backed operator inherits, and the power-iteration estimate of
+    ``rho(S~^{2^d})`` (the Richardson contraction / Chebyshev interval bound,
+    see :mod:`repro.core.solvers.power`) computed once at chain build so the
+    solve driver never re-measures it.
     """
 
     p1: jax.Array  # (n, n)  Z^ = D^{-1/2} P D^{-1/2}  (array or store handle)
@@ -65,26 +68,39 @@ class ChainOperator:
     deg: jax.Array  # (n,)
     vol: jax.Array  # scalar V_G
     prefetch_depth: int = 2  # panel-pipeline staging depth for streamed consumers
+    rho: float | None = None  # rho(S~^{2^d}) power-iteration estimate (build-time)
 
     def tree_flatten(self):
-        return (self.p1, self.p2, self.deg, self.vol), (self.prefetch_depth,)
+        return (self.p1, self.p2, self.deg, self.vol), (self.prefetch_depth, self.rho)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, prefetch_depth=aux[0])
+        return cls(*children, prefetch_depth=aux[0], rho=aux[1])
 
     def release_scratch(self) -> None:
         """Retire store-backed P1 / P2 from their scratch store (no-op for
         resident operators).  Call once the operator will not be used again;
         every consumer that builds oocore operators internally
-        (``detect_anomalies``, ``SequenceDetector``) does this itself."""
+        (``detect_anomalies``, ``SequenceDetector``) does this itself.
+
+        A failed removal (a wedged scratch dir, a concurrently-removed
+        snapshot) is *warned*, never raised: scoring already succeeded and
+        the scratch is disposable -- but a silently growing scratch dir must
+        be diagnosable, so only the expected store errors are swallowed.
+        """
         for buf in (self.p1, self.p2):
             store = getattr(buf, "store", None)
             if store is not None and hasattr(buf, "snap_id"):
                 try:
                     store.remove_snapshot(buf.snap_id)
-                except Exception:
-                    pass
+                except (OSError, ValueError, KeyError) as e:
+                    warnings.warn(
+                        f"release_scratch: could not remove snapshot "
+                        f"{buf.snap_id!r} from its scratch store ({e!r}); "
+                        f"the scratch dir may be accumulating orphans",
+                        RuntimeWarning,
+                        stacklevel=2,
+                    )
 
 
 def _col_scale_body(tile, blk, v):
@@ -222,4 +238,10 @@ def chain_product(
     else:
         l_mat = lap.laplacian(ctx, a, deg, dtype=dtype, prefetch_depth=prefetch_depth)
         p2 = mm(p1, l_mat)
-    return ChainOperator(p1=p1, p2=p2, deg=deg, vol=vol)
+    # Measure the Richardson contraction rho(S~^{2^d}) once, while P2 is hot:
+    # a handful of eager skinny mat-vecs against the 2(d-1)+1 n^3 GEMMs above.
+    # The solve driver reads it for Chebyshev intervals and telemetry.
+    from repro.core.solvers.power import estimate_rho
+
+    rho = estimate_rho(ctx, p2, prefetch_depth=prefetch_depth)
+    return ChainOperator(p1=p1, p2=p2, deg=deg, vol=vol, rho=rho)

@@ -24,7 +24,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import rng as crng
 from repro.core.chain import ChainOperator, chain_product
 from repro.core.distmatrix import DistContext
-from repro.core.solver import estimate_solution
+from repro.core.solvers import SolveReport, SolverSpec, solve
 from repro.core.tiles import is_streamable, tile_map, tile_stream
 
 
@@ -53,11 +53,28 @@ class CommuteConfig:
     prefetch_depth: int = 2
     tile_codec: str = "raw"
     solver_batch: int = 1
+    # Solver subsystem (see repro.core.solvers): the iterative method, an
+    # optional relative-residual target (None = fixed `q` iterations, the
+    # historical behaviour), an optional hard step cap, and the paper's delta
+    # (q = ceil(log 1/delta)) as an alternative way to bound iterations.
+    solver: str = "richardson"  # "richardson" | "chebyshev"
+    solver_tol: float | None = None
+    solver_max_iters: int | None = None
+    delta: float | None = None
 
     def k_rp(self, n: int) -> int:
         if self.k_override is not None:
             return int(self.k_override)
         return max(1, math.ceil(math.log(n / self.eps_rp)))
+
+    def solver_spec(self) -> SolverSpec:
+        """The :class:`~repro.core.solvers.SolverSpec` these knobs select."""
+        return SolverSpec(
+            method=self.solver,
+            tolerance=self.solver_tol,
+            max_iters=self.solver_max_iters,
+            delta=self.delta,
+        )
 
 
 def _edge_projection_body(tile, blk, seed, ks):
@@ -118,6 +135,7 @@ class Embedding:
     z: jax.Array  # (n, k) row-sharded
     vol: jax.Array  # scalar V_G
     op: ChainOperator | None = None  # kept for reuse across random batches
+    report: SolveReport | None = None  # solver telemetry for this embedding's solve
 
 
 def commute_time_embedding(
@@ -153,16 +171,17 @@ def commute_time_embedding(
             prefetch_depth=cfg.prefetch_depth,
         )
     y = edge_projection(ctx, a, cfg.seed, k, prefetch_depth=cfg.prefetch_depth)
-    z = estimate_solution(
+    z, report = solve(
         ctx,
         op,
         y,
-        cfg.q,
+        cfg.solver_spec(),
+        fixed_q=cfg.q,
         deflate=cfg.deflate,
         solver_batch=cfg.solver_batch,
         prefetch_depth=cfg.prefetch_depth,
     )
-    return Embedding(z=z, vol=op.vol, op=op)
+    return Embedding(z=z, vol=op.vol, op=op, report=report)
 
 
 def commute_distance_block(

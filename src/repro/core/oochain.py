@@ -327,7 +327,15 @@ def chain_product_oocore(
     work.remove_snapshot(t_h.snap_id)
     work.remove_snapshot(p_h.snap_id)
 
+    # Measure the Richardson contraction rho(S~^{2^d}) once at build: the
+    # power iteration wraps the store-backed P2 in a CachingHandle, so the
+    # whole estimate costs one real scratch pass (replays from host RAM for
+    # the rest).  The solve driver reads it for Chebyshev intervals.
+    from repro.core.solvers.power import estimate_rho
+
+    rho = estimate_rho(ctx, p2_h, prefetch_depth=prefetch_depth)
     return ChainOperator(
         p1=p1_h, p2=p2_h, deg=deg, vol=vol,
         prefetch_depth=prefetch_depth or DEFAULT_PREFETCH_DEPTH,
+        rho=rho,
     )

@@ -169,7 +169,10 @@ class SequenceDetector:
                 prefetch_depth=self.cfg.prefetch_depth,
             )
             idx, vals = top_anomalies(scores, self.top_k)
-            out = CADResult(scores=scores, top_idx=idx, top_val=vals)
+            out = CADResult(
+                scores=scores, top_idx=idx, top_val=vals,
+                solve_reports=(e_prev.report, emb.report),
+            )
             jax.block_until_ready(out.scores)
             self._merge_topk(idx, vals, self._t - 1)
             self._transitions.append(out)

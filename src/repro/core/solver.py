@@ -11,30 +11,25 @@ the 1-orthogonal subspace is governed by rho(S~^{2^d}) = lambda_2^{2^d} < 1.
 All right-hand sides are batched: b is (n, k_RP) and every iteration is one
 skinny GEMM -- the paper's key refactor (chain precomputed once, iterations are
 mat-vec) carries over verbatim and is what makes k_RP solves cheap.
+
+This module is now a thin compatibility shim over the pluggable solver
+subsystem (:mod:`repro.core.solvers`): the unified :func:`~repro.core.solvers.solve`
+driver owns the resident/streamed branching, tolerance-targeted stopping and
+the Chebyshev accelerator; ``estimate_solution`` maps the historical
+fixed-``q`` Richardson call onto it.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.core.chain import ChainOperator
 from repro.core.distmatrix import DistContext, matmul_rowblock
-from repro.core.tiles import is_streamable
+from repro.core.solvers import SolverSpec, solve
+from repro.core.solvers.driver import deflate_constant  # re-export (back-compat)
 
-
-def deflate_constant(ctx: DistContext, y: jax.Array) -> jax.Array:
-    """Remove the all-ones (Laplacian nullspace) component from each column.
-
-    Solutions of L z = y are defined up to a constant shift, which cancels in
-    commute distances; removing it keeps bf16/fp32 iterates from drifting.
-    The result is constrained to the row-sharded layout so the mean-subtract
-    (an all-reduce over rows) can't silently regather the operand.
-    """
-    mean = jnp.mean(y.astype(jnp.float32), axis=0, keepdims=True)
-    out = (y.astype(jnp.float32) - mean).astype(y.dtype)
-    return ctx.constrain(out, ctx.rowblock_spec)
+__all__ = ["deflate_constant", "estimate_solution", "residual_norm"]
 
 
 def estimate_solution(
@@ -49,62 +44,57 @@ def estimate_solution(
 ) -> jax.Array:
     """x* ~= L^+ b for each of the k columns of b (row-sharded (n, k)).
 
+    Fixed-iteration Richardson through the unified solve driver
+    (:func:`repro.core.solvers.solve`): ``y0 = chi`` then ``q_iters - 1``
+    refinement steps, exactly the historical loop.  Callers that want
+    tolerance-targeted stopping, the Chebyshev accelerator, or the
+    :class:`~repro.core.solvers.SolveReport` telemetry should call the driver
+    directly with a :class:`~repro.core.solvers.SolverSpec`.
+
     Out-of-core operators (store-backed P1/P2) stream their panels through
     the panel pipeline; ``prefetch_depth`` (default: the operator's build
-    depth) sets the staging depth.  ``solver_batch=b`` batches the Richardson
-    iterations against the *scratch store*: P2 is streamed from the store
-    once per batch of b iterations and its decoded panels are replayed from
-    a host-RAM cache for the remaining b-1 (see
-    :class:`repro.store.CachingHandle`), cutting solve-phase scratch reads
-    ~b x.  The replayed panels are bitwise identical to re-streamed ones, so
-    batching never changes the solution; host cost is one decoded P2 (n^2
-    bytes) while the solve runs.  Ignored for resident operators (nothing
+    depth) sets the staging depth.  ``solver_batch=b`` batches the iterations
+    against the *scratch store*: P2 is streamed from the store once per batch
+    of b iterations and its decoded panels are replayed from a host-RAM cache
+    for the remaining b-1 (see :class:`repro.store.CachingHandle`), cutting
+    solve-phase scratch reads ~b x without changing the solution (replayed
+    panels are bitwise identical).  Ignored for resident operators (nothing
     streams).
     """
     if q_iters < 1:
         raise ValueError("q must be >= 1")
     if solver_batch < 1:
         raise ValueError("solver_batch must be >= 1")
-    depth = prefetch_depth if prefetch_depth is not None else getattr(
-        op, "prefetch_depth", None
+    y, _ = solve(
+        ctx,
+        op,
+        b,
+        SolverSpec(method="richardson"),
+        fixed_q=q_iters,
+        deflate=deflate,
+        solver_batch=solver_batch,
+        prefetch_depth=prefetch_depth,
     )
-    b = ctx.constrain(b, ctx.rowblock_spec)
-    chi = matmul_rowblock(ctx, op.p1, b, prefetch_depth=depth)
-    if deflate:
-        chi = deflate_constant(ctx, chi)
-
-    if is_streamable(op.p1) or is_streamable(op.p2):
-        # Out-of-core operator: the mat-vec streams store panels on the host,
-        # so the iteration must stay a Python loop (a traced lax.scan body
-        # cannot fetch panels).  q is small; each batch of solver_batch
-        # steps streams P2 from the store once and replays it from host RAM.
-        p2, cached = op.p2, None
-        if solver_batch > 1 and is_streamable(op.p2):
-            from repro.store import CachingHandle  # deferred: optional path
-
-            p2 = cached = CachingHandle(op.p2)
-        y = chi
-        for it in range(q_iters - 1):
-            if cached is not None and it and it % solver_batch == 0:
-                cached.refresh()  # batch boundary: next pass re-streams the store
-            y = y - matmul_rowblock(ctx, p2, y, prefetch_depth=depth) + chi
-            if deflate:
-                y = deflate_constant(ctx, y)
-        return y
-
-    def body(y, _):
-        y = y - matmul_rowblock(ctx, op.p2, y) + chi
-        if deflate:
-            y = deflate_constant(ctx, y)
-        return y, None
-
-    y, _ = lax.scan(body, chi, None, length=q_iters - 1)
     return y
 
 
-def residual_norm(ctx: DistContext, l_mat: jax.Array, x: jax.Array, b: jax.Array) -> jax.Array:
-    """||L x - b||_F / ||b||_F -- the solver's acceptance metric in tests."""
-    r = matmul_rowblock(ctx, l_mat, x) - b
+def residual_norm(
+    ctx: DistContext,
+    l_mat,
+    x: jax.Array,
+    b: jax.Array,
+    *,
+    prefetch_depth: int | None = None,
+) -> jax.Array:
+    """||L x - b||_F / ||b||_F -- the solver's acceptance metric.
+
+    ``l_mat`` may be a resident sharded Laplacian or a store-backed snapshot
+    handle: the mat-vec routes through :func:`matmul_rowblock`, whose
+    streamed branch fetches row panels via the panel pipeline
+    (``prefetch_depth`` staged ahead), so tolerance-targeted stopping can be
+    validated end-to-end out-of-core without materializing L on device.
+    """
+    r = matmul_rowblock(ctx, l_mat, x, prefetch_depth=prefetch_depth) - b
     num = jnp.sqrt(jnp.sum(r.astype(jnp.float32) ** 2))
     den = jnp.sqrt(jnp.sum(b.astype(jnp.float32) ** 2))
     return num / jnp.maximum(den, 1e-30)

@@ -1,0 +1,30 @@
+"""Pluggable iterative-solver subsystem for the chain-operator solve.
+
+Public API re-exports: :class:`SolverSpec` / :class:`SolveReport` (the
+contract), :func:`solve` (the unified driver owning resident-vs-streamed
+branching), :func:`estimate_rho` (the power-iteration contraction estimate
+cached on :class:`repro.core.chain.ChainOperator`).
+"""
+
+from repro.core.solvers.base import (
+    DEFAULT_DELTA,
+    METHODS,
+    TOLERANCE_ITER_CAP,
+    SolveReport,
+    SolverSpec,
+    iters_from_delta,
+)
+from repro.core.solvers.driver import deflate_constant, solve
+from repro.core.solvers.power import estimate_rho
+
+__all__ = [
+    "DEFAULT_DELTA",
+    "METHODS",
+    "TOLERANCE_ITER_CAP",
+    "SolveReport",
+    "SolverSpec",
+    "deflate_constant",
+    "estimate_rho",
+    "iters_from_delta",
+    "solve",
+]

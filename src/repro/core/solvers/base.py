@@ -1,0 +1,118 @@
+"""Solver contract: :class:`SolverSpec` (what to run) / :class:`SolveReport`
+(what happened).
+
+The spec is deliberately tiny and hashable -- it selects a *method* from the
+registry in :mod:`repro.core.solvers.driver` and a *stopping rule*:
+
+* ``tolerance`` -- stop when the relative preconditioned residual
+  ``||Z^(b - L y)|| / ||Z^ b||`` drops below it (the solver's natural,
+  free-to-measure convergence metric: for Richardson it IS the step just
+  taken).  Khoa & Chawla (arXiv:1111.4541) frame the commute-time solve as
+  solve-to-epsilon rather than solve-for-q-iterations; this is that knob.
+* ``max_iters`` -- a hard cap on refinement steps (one P2 mat-vec each).
+* ``delta`` -- the paper's accuracy parameter: Algorithm 2 runs
+  ``q = ceil(log 1/delta)`` Richardson iterations.  When no explicit cap is
+  given, the cap is derived from delta exactly that way.
+
+Every solve returns a :class:`SolveReport` alongside the solution, so
+consumers (the sequence engine, the CLI) can surface per-transition solver
+telemetry -- iterations, final residual, scratch bytes streamed -- instead of
+assuming worst-case behaviour.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+METHODS = ("richardson", "chebyshev")
+
+# Paper default: delta = 1e-4 gives q = ceil(ln 1e4) = 10, matching the
+# CommuteConfig default q.
+DEFAULT_DELTA = 1e-4
+
+# Safety cap when only a tolerance is given: a tolerance the operator cannot
+# reach (rho too close to 1) must terminate, and the report says so.
+TOLERANCE_ITER_CAP = 300
+
+
+def iters_from_delta(delta: float) -> int:
+    """The paper's iteration count: q = ceil(log 1/delta), total iterations
+    (the initial ``chi = Z^ b`` application counts as the first)."""
+    if not 0.0 < delta < 1.0:
+        raise ValueError(f"delta must be in (0, 1), got {delta}")
+    return max(1, math.ceil(math.log(1.0 / delta)))
+
+
+@dataclass(frozen=True)
+class SolverSpec:
+    """Which iterative method to run, and when to stop.
+
+    ``max_iters`` counts *refinement steps* (P2 mat-vecs after the initial
+    ``y0 = chi``); the paper's q corresponds to ``max_iters + 1``.  Precedence
+    for the step bound: explicit ``max_iters`` > ``delta``-derived
+    ``q(delta) - 1`` > ``TOLERANCE_ITER_CAP`` (tolerance-only specs) > the
+    caller's fixed q.
+    """
+
+    method: str = "richardson"
+    tolerance: float | None = None  # relative pseudo-residual target
+    max_iters: int | None = None  # cap on refinement steps (P2 mat-vecs)
+    delta: float | None = None  # paper delta; derives the cap when max_iters unset
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(f"unknown solver {self.method!r}; want one of {METHODS}")
+        if self.tolerance is not None and self.tolerance <= 0:
+            raise ValueError(f"tolerance must be > 0, got {self.tolerance}")
+        if self.max_iters is not None and self.max_iters < 0:
+            raise ValueError(f"max_iters must be >= 0, got {self.max_iters}")
+        if self.delta is not None and not 0.0 < self.delta < 1.0:
+            raise ValueError(f"delta must be in (0, 1), got {self.delta}")
+
+    def max_steps(self, fixed_q: int | None = None) -> int:
+        """Resolved refinement-step bound for this spec (see class docstring)."""
+        if self.max_iters is not None:
+            return self.max_iters
+        if self.delta is not None:
+            return max(1, iters_from_delta(self.delta) - 1)
+        if self.tolerance is not None:
+            return TOLERANCE_ITER_CAP
+        if fixed_q is not None:
+            if fixed_q < 1:
+                raise ValueError("q must be >= 1")
+            return fixed_q - 1
+        return max(1, iters_from_delta(DEFAULT_DELTA) - 1)
+
+
+@dataclass
+class SolveReport:
+    """Telemetry from one driver solve (one batch of k_RP right-hand sides).
+
+    ``residual`` is the relative preconditioned residual
+    ``||Z^(b - L y)||_F / ||Z^ b||_F`` of the last *measured* iterate (the
+    stopping metric); ``bytes_read`` / ``panels`` are the scratch-store bytes
+    served and panels staged during this solve (zero for resident operators
+    -- nothing streams).
+    """
+
+    method: str
+    iterations: int  # refinement steps taken (P2 mat-vecs)
+    residual: float
+    converged: bool  # residual <= tolerance (always True for fixed-iteration runs)
+    tolerance: float | None
+    max_iters: int  # the resolved step bound the run was given
+    streamed: bool  # True when P1/P2 were store-backed (out-of-core solve)
+    rho: float | None = None  # Chebyshev interval bound used (inflated estimate)
+    bytes_read: int = 0  # scratch bytes served during the solve
+    panels: int = 0  # panels staged during the solve
+
+    def summary(self) -> str:
+        """One-line telemetry, e.g. for the CLI's per-transition printout."""
+        tol = f" tol={self.tolerance:.1e}" if self.tolerance is not None else ""
+        conv = "" if self.converged else " NOT-CONVERGED"
+        io = f", {self.bytes_read / 1e6:.1f} MB scratch" if self.streamed else ""
+        return (
+            f"{self.method}: {self.iterations} its{tol}, "
+            f"res {self.residual:.1e}{conv}{io}"
+        )

@@ -66,10 +66,27 @@ def main():
                          "scratch (bf16 halves bytes; zstd needs the optional "
                          "'zstandard' package and falls back to raw without it)")
     ap.add_argument("--solver-batch", type=int, default=1,
-                    help="Richardson iterations per scratch stream of P2: the "
+                    help="solver iterations per scratch stream of P2: the "
                          "solver streams the store once per batch and replays "
                          "decoded panels from host RAM (identical scores, "
                          "~batch x fewer scratch reads)")
+    ap.add_argument("--solver", default="richardson",
+                    choices=["richardson", "chebyshev"],
+                    help="iterative method for the chain solve (see "
+                         "repro.core.solvers): chebyshev accelerates the "
+                         "Richardson iteration to ~sqrt-fewer iterations using "
+                         "the rho(S^{2^d}) estimate cached at chain build")
+    ap.add_argument("--solver-tol", type=float, default=None,
+                    help="stop the solve when the relative preconditioned "
+                         "residual drops below this (default: fixed q "
+                         "iterations, the paper's worst-case bound)")
+    ap.add_argument("--solver-max-iters", type=int, default=None,
+                    help="hard cap on solver refinement steps (default: "
+                         "derived from --delta when given; a 300-step safety "
+                         "cap when only --solver-tol is set; else q-1)")
+    ap.add_argument("--delta", type=float, default=None,
+                    help="paper accuracy parameter: bounds iterations at "
+                         "q = ceil(log 1/delta) when no explicit cap is given")
     args = ap.parse_args()
 
     # Resolve the codec once up front: a backend-less zstd request degrades to
@@ -84,7 +101,9 @@ def main():
     cfg = CommuteConfig(eps_rp=args.eps, d=args.d, q=args.q, schedule=args.schedule,
                         oocore=args.oocore_chain, oocore_dir=args.oocore_dir,
                         prefetch_depth=args.prefetch_depth,
-                        tile_codec=args.tile_codec, solver_batch=args.solver_batch)
+                        tile_codec=args.tile_codec, solver_batch=args.solver_batch,
+                        solver=args.solver, solver_tol=args.solver_tol,
+                        solver_max_iters=args.solver_max_iters, delta=args.delta)
 
     if args.dataset == "gmm":
         n_nodes = args.n
@@ -156,6 +175,20 @@ def main():
             f"[caddelag]   transition {t}->{t + 1}: {dt:6.2f}s  "
             f"top-{args.top_k} truth overlap: {hits}/{len(truth) if truth else 0}"
         )
+        # Per-transition solver telemetry: one SolveReport per endpoint
+        # embedding (the left one was built by the previous push).
+        reps = [rep for rep in r.solve_reports if rep is not None]
+        if reps:
+            its = "+".join(str(rep.iterations) for rep in reps)
+            worst = max(reps, key=lambda rep: rep.residual)
+            scratch = sum(rep.bytes_read for rep in reps)
+            io = f", {scratch / 1e6:.1f} MB scratch" if any(
+                rep.streamed for rep in reps) else ""
+            conv = "" if all(rep.converged for rep in reps) else "  NOT-CONVERGED"
+            print(
+                f"[caddelag]     solver[{worst.method}]: {its} its "
+                f"(cap {worst.max_iters}), res {worst.residual:.1e}{io}{conv}"
+            )
     total = sum(res.transition_seconds)
     print(f"[caddelag] total {total:.2f}s "
           f"({total / max(len(res.transitions), 1):.2f}s per transition, amortized)")

@@ -92,6 +92,38 @@ def test_sequence_retrace_budget(ctx1):
     assert after_first > 0  # sanity: the cold build did trace programs
 
 
+def test_adaptive_solver_retrace_budget(ctx1):
+    """The lax.while_loop solve driver keeps the retrace budget: steady-state
+    pushes add ZERO traces/program-cache misses, and because the tolerance,
+    the step cap and the Chebyshev interval bound are *operands* (not trace
+    constants), changing them between runs must not compile anything new."""
+    from dataclasses import replace
+
+    cfg = CommuteConfig(
+        eps_rp=1e-2, d=3, q=3, schedule="xla", k_override=4,
+        solver="chebyshev", solver_tol=1e-4,
+    )
+    snaps = [_sym(32, 40 + t) for t in range(4)]
+    det = SequenceDetector(ctx1, cfg, top_k=5)
+    det.push(ctx1.put_matrix(snaps[0]))
+    det.push(ctx1.put_matrix(snaps[1]))
+    st = program_cache_stats()
+    warm_traces, warm_misses = st.traces, st.misses
+    det.push(ctx1.put_matrix(snaps[2]))
+    det.push(ctx1.put_matrix(snaps[3]))
+    assert st.traces == warm_traces, "steady-state adaptive push retraced"
+    assert st.misses == warm_misses, "steady-state adaptive push missed the cache"
+
+    # different tolerance / cap, same geometry: still zero new programs
+    det2 = SequenceDetector(
+        ctx1, replace(cfg, solver_tol=1e-6, solver_max_iters=7), top_k=5
+    )
+    det2.push(ctx1.put_matrix(snaps[0]))
+    det2.push(ctx1.put_matrix(snaps[1]))
+    assert st.traces == warm_traces, "tolerance change retraced a program"
+    assert st.misses == warm_misses, "tolerance leaked into a program cache key"
+
+
 def test_streamed_sequence_retrace_budget(ctx1):
     """The retrace budget holds out-of-core too: store-backed snapshots and
     the oocore chain reuse one compiled program set across the sequence."""
