@@ -33,12 +33,19 @@ from repro.core import (
     detect_anomalies,
     estimate_solution,
     reset_stream_stats,
+    solve,
     stream_stats,
     trivial_context,
 )
 from repro.core.embedding import edge_projection
 from repro.store import TileStore
 from repro.store.tilestore import _zstd_backend
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from roofline import streamed_solve_flops, streamed_solve_roofline  # noqa: E402
 
 
 def _sym(n: int, seed: int) -> np.ndarray:
@@ -219,6 +226,68 @@ def sweep(n=128, d=3, q=8, grid=None, budget=int(1e6), out=print):
     return rows
 
 
+def trajectory(out_path, out=print):
+    """Canonical perf-trajectory artifact (``BENCH_oochain.json``).
+
+    One fixed configuration -- n=128, d=3, q=6, grid 8, bf16 scratch through
+    the fused kernel path -- with a stable schema (byte counters, phase
+    seconds, iterations, fraction-of-roofline), so the weekly CI artifact
+    trends across PRs without renames.
+    """
+    n, d, q, k, g = 128, 3, 6, 6, 8
+    ctx = trivial_context()
+    a = _sym(n, 0)
+    store = TileStore.create(None, n=n, grid=g)
+    h = store.put_snapshot("t0", a)
+
+    reset_stream_stats()
+    t0 = time.perf_counter()
+    op = chain_product(ctx, h, d, oocore=True, tile_codec="bf16",
+                       use_gemm_kernel=True)
+    jax.block_until_ready(op.deg)
+    build_s = time.perf_counter() - t0
+    bst = stream_stats()
+    build = {"seconds": build_s, "bytes_read": bst.bytes_read,
+             "bytes_decoded": bst.bytes_decoded, "bytes_h2d": bst.bytes_h2d,
+             "bytes_h2d_saved": bst.bytes_h2d_saved, "panels": bst.panels,
+             "peak_live_bytes": bst.peak_live_bytes}
+
+    y = edge_projection(ctx, h, 0, k)
+    reset_stream_stats()
+    t0 = time.perf_counter()
+    z, rep = solve(ctx, op, y, fixed_q=q)
+    jax.block_until_ready(z)
+    solve_s = time.perf_counter() - t0
+    sst = stream_stats()
+    op.release_scratch()
+    roof = streamed_solve_roofline(
+        bytes_read=sst.bytes_read, bytes_h2d=sst.bytes_h2d,
+        flops=streamed_solve_flops(n, k, rep.iterations), seconds=solve_s,
+    )
+    result = {
+        "bench": "oochain_trajectory", "schema": 1,
+        "config": {"n": n, "d": d, "q": q, "k_rp": k, "grid": g,
+                   "codec": "bf16", "use_gemm_kernel": True},
+        "build": build,
+        "solve": {"seconds": solve_s, "iterations": rep.iterations,
+                  "residual": rep.residual,
+                  "bytes_read": sst.bytes_read,
+                  "bytes_decoded": sst.bytes_decoded,
+                  "bytes_h2d": sst.bytes_h2d,
+                  "bytes_h2d_saved": sst.bytes_h2d_saved,
+                  "panels": sst.panels},
+        "roofline_frac": roof["roofline_frac"],
+        "roofline_bound": roof["bound"],
+        "roofline": roof,
+    }
+    Path(out_path).write_text(json.dumps(result, indent=2))
+    out(f"[bench_oochain] trajectory: build {build_s:.2f}s, solve "
+        f"{solve_s:.2f}s/{rep.iterations} its, {sst.bytes_h2d / 1e6:.1f} MB "
+        f"H2D ({sst.bytes_h2d_saved / 1e6:.1f} MB saved), roofline "
+        f"{roof['roofline_frac']:.2e} ({roof['bound']}-bound); wrote {out_path}")
+    return result
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=256)
@@ -230,7 +299,13 @@ def main():
                     help="prefetch-depth x codec x solver-batch sweep with "
                          "bytes-moved columns")
     ap.add_argument("--out", default=None, help="write results JSON here")
+    ap.add_argument("--trajectory", default=None, metavar="PATH",
+                    help="write the canonical fixed-config perf-trajectory "
+                         "artifact (BENCH_oochain.json) and exit")
     args = ap.parse_args()
+    if args.trajectory:
+        trajectory(args.trajectory)
+        return
     run(n=args.n, d=args.d, q=args.q, grid=args.grid, budget_mb=args.budget_mb,
         do_sweep=args.sweep, out_path=args.out)
 

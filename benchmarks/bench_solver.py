@@ -48,6 +48,11 @@ from repro.core.embedding import edge_projection
 from repro.graphs import gmm_points, similarity_graph
 from repro.store import TileStore
 
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from roofline import streamed_solve_flops, streamed_solve_roofline  # noqa: E402
+
 METHODS = ("richardson", "chebyshev")
 
 
@@ -85,12 +90,13 @@ def run(n=96, d=4, k=8, tol=1e-5, grid=8, seed=0, out_path=None, out=print):
                 x, rep = solve(ctx, op, y, SolverSpec(method=method, tolerance=tol))
                 jax.block_until_ready(x)
                 dt = time.perf_counter() - t0
-                cell[method] = (np.asarray(x), rep, dt, stream_stats().bytes_read)
+                st = stream_stats()
+                cell[method] = (np.asarray(x), rep, dt, st.bytes_read, st.bytes_h2d)
             # Accuracy pin: fixed-q Richardson at the adaptive run's count.
             q_fix = cell["richardson"][1].iterations + 1
             ref = np.asarray(estimate_solution(ctx, op, y, q_fix))
             for method in METHODS:
-                x, rep, dt, bread = cell[method]
+                x, rep, dt, bread, bh2d = cell[method]
                 close = bool(np.allclose(x, ref, rtol=1e-4, atol=1e-3))
                 row = {
                     "mesh": mesh_label, "storage": storage, "method": method,
@@ -99,10 +105,20 @@ def run(n=96, d=4, k=8, tol=1e-5, grid=8, seed=0, out_path=None, out=print):
                     "solve_s": dt, "bytes_read": bread,
                     "fixed_q_baseline": q_fix, "allclose_vs_fixed_q": close,
                 }
+                frac = ""
+                if storage == "oocore":
+                    roof = streamed_solve_roofline(
+                        bytes_read=bread, bytes_h2d=bh2d,
+                        flops=streamed_solve_flops(n, k, rep.iterations),
+                        seconds=dt,
+                    )
+                    row["roofline"] = roof
+                    frac = (f" roofline={roof['roofline_frac']:.2e} "
+                            f"({roof['bound']}-bound)")
                 rows.append(row)
                 out(f"[bench_solver]  {mesh_label:>4s} {storage:8s} {method:10s} | "
                     f"{rep.iterations:5d} {rep.residual:8.1e} {dt:7.2f} | "
-                    f"{bread / 1e6:7.2f} | allclose={close}")
+                    f"{bread / 1e6:7.2f} | allclose={close}{frac}")
             r_rep, c_rep = cell["richardson"][1], cell["chebyshev"][1]
             iters_ratio = r_rep.iterations / max(c_rep.iterations, 1)
             if storage == "oocore":
@@ -131,6 +147,69 @@ def run(n=96, d=4, k=8, tol=1e-5, grid=8, seed=0, out_path=None, out=print):
     return result
 
 
+def trajectory(out_path, out=print):
+    """Canonical perf-trajectory artifact (``BENCH_solver.json``).
+
+    One fixed configuration -- n=96, d=4, out-of-core chebyshev through the
+    fused kernel path on a bf16 scratch -- with a stable schema, so the weekly
+    CI artifact is directly diffable across PRs: byte counters, solve seconds,
+    iterations and the fraction-of-roofline all trend, none get renamed.
+    """
+    n, d, k, tol, grid = 96, 4, 8, 1e-5, 8
+    ctx = trivial_context()
+    pts, _ = gmm_points(n, 0)
+    a_np = np.asarray(similarity_graph(ctx, pts))
+    store = TileStore.create(None, n=n, grid=grid)
+    h = store.put_snapshot("a", a_np)
+
+    reset_stream_stats()
+    t0 = time.perf_counter()
+    op = chain_product(ctx, h, d, schedule="xla", oocore=True,
+                       tile_codec="bf16", use_gemm_kernel=True)
+    jax.block_until_ready(op.deg)
+    build_s = time.perf_counter() - t0
+    bst = stream_stats()
+    build = {"seconds": build_s, "bytes_read": bst.bytes_read,
+             "bytes_decoded": bst.bytes_decoded, "bytes_h2d": bst.bytes_h2d,
+             "bytes_h2d_saved": bst.bytes_h2d_saved, "panels": bst.panels}
+
+    y = edge_projection(ctx, h, 0, k)
+    reset_stream_stats()
+    t0 = time.perf_counter()
+    x, rep = solve(ctx, op, y, SolverSpec(method="chebyshev", tolerance=tol))
+    jax.block_until_ready(x)
+    solve_s = time.perf_counter() - t0
+    sst = stream_stats()
+    op.release_scratch()
+    roof = streamed_solve_roofline(
+        bytes_read=sst.bytes_read, bytes_h2d=sst.bytes_h2d,
+        flops=streamed_solve_flops(n, k, rep.iterations), seconds=solve_s,
+    )
+    result = {
+        "bench": "solver_trajectory", "schema": 1,
+        "config": {"n": n, "d": d, "k_rp": k, "tol": tol, "grid": grid,
+                   "codec": "bf16", "use_gemm_kernel": True,
+                   "method": "chebyshev"},
+        "build": build,
+        "solve": {"seconds": solve_s, "iterations": rep.iterations,
+                  "residual": rep.residual, "converged": rep.converged,
+                  "bytes_read": sst.bytes_read,
+                  "bytes_decoded": sst.bytes_decoded,
+                  "bytes_h2d": sst.bytes_h2d,
+                  "bytes_h2d_saved": sst.bytes_h2d_saved,
+                  "panels": sst.panels},
+        "roofline_frac": roof["roofline_frac"],
+        "roofline_bound": roof["bound"],
+        "roofline": roof,
+    }
+    Path(out_path).write_text(json.dumps(result, indent=2))
+    out(f"[bench_solver] trajectory: {rep.iterations} its in {solve_s:.2f}s, "
+        f"{sst.bytes_h2d / 1e6:.1f} MB H2D "
+        f"({sst.bytes_h2d_saved / 1e6:.1f} MB saved), roofline "
+        f"{roof['roofline_frac']:.2e} ({roof['bound']}-bound); wrote {out_path}")
+    return result
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=96)
@@ -140,7 +219,13 @@ def main():
     ap.add_argument("--tol", type=float, default=1e-5)
     ap.add_argument("--grid", type=int, default=8, help="store tiles per side")
     ap.add_argument("--out", default=None, help="write results JSON here")
+    ap.add_argument("--trajectory", default=None, metavar="PATH",
+                    help="write the canonical fixed-config perf-trajectory "
+                         "artifact (BENCH_solver.json) and exit")
     args = ap.parse_args()
+    if args.trajectory:
+        trajectory(args.trajectory)
+        return
     run(n=args.n, d=args.d, k=args.k, tol=args.tol, grid=args.grid,
         out_path=args.out)
 

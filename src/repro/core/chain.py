@@ -69,13 +69,21 @@ class ChainOperator:
     vol: jax.Array  # scalar V_G
     prefetch_depth: int = 2  # panel-pipeline staging depth for streamed consumers
     rho: float | None = None  # rho(S~^{2^d}) power-iteration estimate (build-time)
+    # Streamed consumers route mat-vecs through the fused Pallas stream-GEMM
+    # kernel path (stored-width panel shipping + in-kernel decode + fused
+    # solve epilogue); set by the out-of-core build, inherited by solve().
+    use_gemm_kernel: bool = False
 
     def tree_flatten(self):
-        return (self.p1, self.p2, self.deg, self.vol), (self.prefetch_depth, self.rho)
+        return (self.p1, self.p2, self.deg, self.vol), (
+            self.prefetch_depth, self.rho, self.use_gemm_kernel,
+        )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, prefetch_depth=aux[0], rho=aux[1])
+        return cls(
+            *children, prefetch_depth=aux[0], rho=aux[1], use_gemm_kernel=aux[2]
+        )
 
     def release_scratch(self) -> None:
         """Retire store-backed P1 / P2 from their scratch store (no-op for
@@ -153,6 +161,7 @@ def chain_product(
     oocore_panel_rows: int | None = None,
     tile_codec: str = "raw",
     prefetch_depth: int | None = None,
+    use_gemm_kernel: bool = False,
 ) -> ChainOperator:
     """Build the chain operator from ``a``: a resident sharded adjacency or a
     store-backed snapshot handle.
@@ -181,6 +190,12 @@ def chain_product(
     only where panels actually stream: the scratch store encoding and the
     panel-pipeline staging depth of the out-of-core build (and of the
     streamed ``fuse_l`` GEMM with a handle-backed ``a``).
+
+    ``use_gemm_kernel`` (out-of-core only; ignored resident, where
+    ``use_kernel`` already selects the Pallas tile bodies) runs the chain's
+    GEMM steps through the fused streaming kernel with stored-width panel
+    shipping, and marks the returned operator so streamed solves inherit the
+    kernel path -- see :func:`repro.core.oochain.chain_product_oocore`.
     """
     if d_len < 1:
         raise ValueError("chain length d must be >= 1")
@@ -200,6 +215,7 @@ def chain_product(
             panel_rows=oocore_panel_rows,
             tile_codec=tile_codec,
             prefetch_depth=prefetch_depth,
+            use_gemm_kernel=use_gemm_kernel,
         )
     mm = partial(matmul, ctx, schedule=schedule, out_dtype=dtype, use_kernel=use_kernel)
 

@@ -53,6 +53,11 @@ class CommuteConfig:
     prefetch_depth: int = 2
     tile_codec: str = "raw"
     solver_batch: int = 1
+    # Fused Pallas stream-GEMM path for the out-of-core hot loop: panels ship
+    # at stored width (bf16 bit patterns decode in-kernel, halving H2D) and
+    # streamed solve iterations fuse mat-vec + update + residual into one
+    # pass over the panel stream.  Interpret-mode fallback off-TPU.
+    use_gemm_kernel: bool = False
     # Solver subsystem (see repro.core.solvers): the iterative method, an
     # optional relative-residual target (None = fixed `q` iterations, the
     # historical behaviour), an optional hard step cap, and the paper's delta
@@ -169,6 +174,7 @@ def commute_time_embedding(
             oocore_panel_rows=cfg.oocore_panel_rows,
             tile_codec=cfg.tile_codec,
             prefetch_depth=cfg.prefetch_depth,
+            use_gemm_kernel=cfg.use_gemm_kernel,
         )
     y = edge_projection(ctx, a, cfg.seed, k, prefetch_depth=cfg.prefetch_depth)
     z, report = solve(

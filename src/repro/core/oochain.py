@@ -49,7 +49,14 @@ from jax.sharding import PartitionSpec as P
 from repro.core import laplacian as lap
 from repro.core.chain import ChainOperator
 from repro.core.distmatrix import DistContext
-from repro.core.tiles import is_streamable, sharded_zeros, stream_stats
+from repro.core.tiles import (
+    cached_program,
+    is_streamable,
+    program_cache_stats,
+    shard_map,
+    sharded_zeros,
+    stream_stats,
+)
 
 # ---------------------------------------------------------------------------
 # panel programs (module-level jit: compiled once per geometry, the row
@@ -114,6 +121,51 @@ def _gemm_step_neg(acc, block, right):
     )
 
 
+@jax.jit
+def _decode_bits_panel(u):
+    """bf16 bit-pattern panel (uint16) -> fp32 on device (exact widening,
+    same values the host codec would have produced)."""
+    return lax.bitcast_convert_type(u, jnp.bfloat16).astype(jnp.float32)
+
+
+def _kernel_gemm_program(ctx, positive: bool, blk_dtype: str, right_dtype: str,
+                         ph: int, n: int):
+    """Cached shard_map GEMM step through the fused Pallas kernel.
+
+    SUMMA-style: each device all-gathers the block's column shards and the
+    right panel's row shards (at *stored* width -- uint16 gathers move half
+    the ICI bytes too), then runs one ``stream_gemm`` with the accumulator as
+    the fused init: ``acc + sign * block @ right`` in a single kernel, bf16
+    bit patterns widened in VMEM.  Cached per (ctx, sign, operand dtypes,
+    geometry) so steady-state chain builds add zero traces.
+    """
+
+    def build():
+        from repro.kernels.ops import stream_gemm
+
+        def local(acc, blk, right):
+            program_cache_stats().traces += 1
+            a_pan = blk
+            if ctx.n_col_shards > 1:
+                a_pan = lax.all_gather(a_pan, ctx.col_axes, axis=1, tiled=True)
+            b_pan = right
+            if ctx.n_row_shards > 1:
+                b_pan = lax.all_gather(b_pan, ctx.row_axes, axis=0, tiled=True)
+            return stream_gemm(a_pan, b_pan, acc, sign=1.0 if positive else -1.0)
+
+        return jax.jit(
+            shard_map(
+                local,
+                mesh=ctx.mesh,
+                in_specs=(ctx.matrix_spec, ctx.matrix_spec, ctx.matrix_spec),
+                out_specs=ctx.matrix_spec,
+            )
+        )
+
+    key = ("oo_gemm_kernel", ctx, positive, blk_dtype, right_dtype, ph, n)
+    return cached_program(key, build)
+
+
 # ---------------------------------------------------------------------------
 # host-side panel plumbing
 # ---------------------------------------------------------------------------
@@ -152,6 +204,7 @@ def chain_product_oocore(
     panel_rows: int | None = None,
     tile_codec: str = "raw",
     prefetch_depth: int | None = None,
+    use_gemm_kernel: bool = False,
 ) -> ChainOperator:
     """Build the chain operator with store-backed working matrices.
 
@@ -180,6 +233,14 @@ def chain_product_oocore(
     and by ``SequenceDetector`` as the operator leaves the two-snapshot
     window).  ``dtype`` is accepted for signature parity but ignored: the
     scratch and the returned operator are always fp32.
+
+    ``use_gemm_kernel=True`` routes every chain GEMM step through the fused
+    Pallas streaming kernel (:mod:`repro.kernels.stream_gemm`): operand
+    panels ship in their *stored* form where the codec is device-decodable
+    (bf16 bit patterns, half the H2D bytes, widened in VMEM) and the
+    accumulate folds into the kernel.  Allclose vs the XLA step (same codec);
+    interpret mode off-TPU.  The flag rides on the returned operator so the
+    solve driver inherits the kernel path for its streamed iterations.
     """
     from repro.store import (  # deferred: core->store only on this path
         DEFAULT_PREFETCH_DEPTH,
@@ -220,13 +281,16 @@ def chain_product_oocore(
     deg_r = jax.device_put(deg, rep)
     inv_sqrt_r = jnp.where(deg_r > 0, lax.rsqrt(jnp.maximum(deg_r, 1e-30)), 0.0)
 
-    def put_panel(host):
+    def put_panel(host, decoded_nbytes: int | None = None):
         dev = jax.device_put(np.ascontiguousarray(np.asarray(host)), sharding)
         st.panels += 1
         st.bytes_h2d += dev.nbytes
+        if decoded_nbytes is not None and decoded_nbytes > dev.nbytes:
+            # Encoded (stored-width) put: the gap vs a host-decoded transfer.
+            st.bytes_h2d_saved += decoded_nbytes - dev.nbytes
         return dev
 
-    def stream(source, walk=None, *, device: bool):
+    def stream(source, walk=None, *, device: bool, encoded: bool = False):
         """A prefetching pipeline over row panels of one operand."""
         return PanelPipeline(
             [source],
@@ -235,6 +299,7 @@ def chain_product_oocore(
             depth=prefetch_depth,
             sharding=sharding if device else None,
             stats=st,
+            encoded=encoded,
         )
 
     def unary_pass(out_id: str, source, fn, *args):
@@ -261,19 +326,26 @@ def chain_product_oocore(
         Both operands are prefetched: the left panels one GEMM row ahead
         (host ring), the right panels along the full nested K-walk (device
         staging), so neither fetch serializes with the MXU.
+
+        On the kernel path (``use_gemm_kernel``) both streams ship stored-
+        form panels (bf16 -> uint16 bits) and each K step is one fused
+        ``stream_gemm`` with the accumulator as init -- the decode moves into
+        VMEM and the stored-vs-decoded H2D gap lands in ``bytes_h2d_saved``.
         """
         step = _gemm_step if sign > 0 else _gemm_step_neg
         nested = [k0 for _ in origins for k0 in origins]  # right walk, per row
+        dec_panel = ph * n * 4  # fp32 bytes a host-decoded panel would ship
         with work.writer(out_id) as w, \
-                stream(left_h, device=False) as lpipe, \
-                stream(right_h, nested, device=True) as rpipe:
+                stream(left_h, device=False, encoded=use_gemm_kernel) as lpipe, \
+                stream(right_h, nested, device=True, encoded=use_gemm_kernel) as rpipe:
             right_iter = iter(rpipe)
             for r0, (left_host,) in lpipe:
                 left_host = np.asarray(left_host)
-                if init == "left":
-                    acc = put_panel(left_host).astype(jnp.float32)
-                elif init == "left_colscale":
-                    acc = _col_scale_panel(put_panel(left_host), col_scale)
+                left_enc = left_host.dtype == np.uint16
+                if init in ("left", "left_colscale"):
+                    lp = put_panel(left_host, dec_panel if left_enc else None)
+                    accp = _decode_bits_panel(lp) if left_enc else lp.astype(jnp.float32)
+                    acc = accp if init == "left" else _col_scale_panel(accp, col_scale)
                 else:
                     acc = sharded_zeros((ph, n), jnp.float32, sharding)
                 for k0 in origins:
@@ -283,8 +355,17 @@ def chain_product_oocore(
                     else:  # resident: our put_panel, not pipeline staging
                         right = put_panel(right)
                         right_live = right.nbytes
-                    block = put_panel(left_host[:, k0 : k0 + ph])
-                    acc = step(acc, block, right)
+                    block = put_panel(
+                        left_host[:, k0 : k0 + ph],
+                        ph * ph * 4 if left_enc else None,
+                    )
+                    if use_gemm_kernel:
+                        prog = _kernel_gemm_program(
+                            ctx, sign > 0, str(block.dtype), str(right.dtype), ph, n
+                        )
+                        acc = prog(acc, block, right)
+                    else:
+                        acc = step(acc, block, right)
                     st._note_live(acc.nbytes + block.nbytes + right_live)
                 w.put_row_panel(r0, np.asarray(acc))
         return work.snapshot(out_id)
@@ -338,4 +419,5 @@ def chain_product_oocore(
         p1=p1_h, p2=p2_h, deg=deg, vol=vol,
         prefetch_depth=prefetch_depth or DEFAULT_PREFETCH_DEPTH,
         rho=rho,
+        use_gemm_kernel=use_gemm_kernel,
     )

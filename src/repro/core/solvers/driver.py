@@ -51,9 +51,18 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from jax.sharding import PartitionSpec as P
+
 from repro.core.distmatrix import DistContext, matmul_rowblock
 from repro.core.solvers.base import SolveReport, SolverSpec
-from repro.core.tiles import cached_program, is_streamable, stream_stats
+from repro.core.tiles import (
+    _axes_index,
+    cached_program,
+    is_streamable,
+    program_cache_stats,
+    shard_map,
+    stream_stats,
+)
 
 # Power iteration converges to rho from below; Chebyshev wants an interval
 # that *contains* the spectrum (a slight overestimate only mildly slows it,
@@ -162,9 +171,133 @@ def _resident_program(ctx: DistContext, method: str, deflate: bool, chi):
 # ---------------------------------------------------------------------------
 
 
+def _kernel_panel_program(ctx, ph: int, n: int, k: int, panel_dtype: str,
+                          fused: bool):
+    """Cached shard_map program for one streamed panel of the kernel path.
+
+    The panel arrives matrix-sharded in its *stored* form (uint16 bf16 bit
+    patterns, or fp32 for raw scratch); ``y`` (and ``chi``, fused) ride
+    replicated so every device can slice both its column window (the GEMM
+    operand) and the panel's global row window (the epilogue operands --
+    panel row-sharding does not coincide with the solver's rowblock
+    sharding, so a sliced-from-replicated read is the only layout-safe way
+    in).  ``fused=True`` is one solve iteration over the panel: mat-vec +
+    ``gy = chi + y - P2 y`` + deflated-residual moments, single kernel pass
+    where the mesh has one column shard, kernel mat-vec + psum + jnp
+    epilogue otherwise.  ``fused=False`` is the plain mat-vec (the chi
+    build).  The row origin is traced, so one program serves every panel.
+    """
+
+    def build():
+        from repro.kernels.ops import fused_panel_matvec, stream_gemm
+
+        R, C = ctx.n_row_shards, ctx.n_col_shards
+        pr, pc = ph // R, n // C
+
+        def local(r0, p_blk, y_rep, *rest):
+            program_cache_stats().traces += 1
+            row0 = r0 + _axes_index(ctx, ctx.row_axes) * pr
+            if C == 1:
+                y_cols = y_rep
+            else:
+                c = _axes_index(ctx, ctx.col_axes)
+                y_cols = lax.dynamic_slice(y_rep, (c * pc, jnp.int32(0)), (pc, k))
+            if not fused:
+                mv = stream_gemm(p_blk, y_cols)
+                if C > 1:
+                    mv = lax.psum(mv, ctx.col_axes)
+                return mv
+            (chi_rep,) = rest
+            y_rows = lax.dynamic_slice(y_rep, (row0, jnp.int32(0)), (pr, k))
+            chi_rows = lax.dynamic_slice(chi_rep, (row0, jnp.int32(0)), (pr, k))
+            if C == 1:
+                gy, cs, ss = fused_panel_matvec(p_blk, y_cols, chi_rows, y_rows)
+            else:
+                mv = lax.psum(stream_gemm(p_blk, y_cols), ctx.col_axes)
+                gy = chi_rows + y_rows - mv
+                delta = chi_rows - mv
+                cs = jnp.sum(delta, axis=0, keepdims=True)
+                ss = jnp.sum(delta * delta).reshape(1, 1)
+            if R > 1:
+                cs = lax.psum(cs, ctx.row_axes)
+                ss = lax.psum(ss, ctx.row_axes)
+            return gy, cs, ss
+
+        out_specs = P(ctx.row_axes, None)
+        if fused:
+            out_specs = (out_specs, P(None, None), P(None, None))
+        in_specs = (P(), ctx.matrix_spec, P(None, None))
+        if fused:
+            in_specs = in_specs + (P(None, None),)
+        return jax.jit(
+            shard_map(
+                local, mesh=ctx.mesh, in_specs=in_specs, out_specs=out_specs
+            )
+        )
+
+    key = ("kernel_panel_matvec", ctx, ph, n, k, panel_dtype, fused)
+    return cached_program(key, build)
+
+
+def _kernel_stream_pass(ctx, handle, y, chi, *, depth, fused):
+    """One pass over a store-backed operator through the Pallas kernel path.
+
+    Panels stream in stored form (``encoded=True`` pipeline: bf16 scratch
+    ships uint16 bit patterns, half the H2D bytes, decoded in VMEM by the
+    kernel).  ``fused=True`` returns ``(gy, colsum, sumsq)`` for one whole
+    solve iteration -- ``gy = chi + y - P2 y`` row-sharded plus the residual
+    moments of ``delta = chi - P2 y`` reduced over all n rows -- so the
+    iteration costs exactly this one pass over the stream.  ``fused=False``
+    returns the plain mat-vec (the chi build).  Per-panel outputs are
+    host-concatenated (eager concatenate on partially-replicated shards is
+    unsafe on jax 0.4.x) and re-put with the solver's rowblock sharding.
+    """
+    from repro.store import PanelPipeline  # deferred: optional path
+
+    n = int(handle.shape[0])
+    k = int(y.shape[1])
+    ph = int(np.lcm(int(handle.panel_rows), ctx.n_row_shards))
+    if n % ph:
+        raise ValueError(f"panel height {ph} does not tile n={n}")
+    st = stream_stats()
+    st.calls += 1
+    sharding = ctx.sharding(ctx.matrix_spec)
+    y_rep = ctx.constrain(y.astype(jnp.float32), P(None, None))
+    chi_rep = (
+        ctx.constrain(chi.astype(jnp.float32), P(None, None)) if fused else None
+    )
+    parts = []
+    cs_total, ss_total = None, 0.0
+    prog = None
+    with PanelPipeline(
+        [handle], range(0, n, ph), ph, depth=depth, sharding=sharding,
+        stats=st, encoded=True,
+    ) as pipe:
+        for r0, (panel,) in pipe:
+            if prog is None:
+                prog = _kernel_panel_program(
+                    ctx, ph, n, k, str(panel.dtype), fused
+                )
+            if fused:
+                gy_p, cs, ss = prog(jnp.int32(r0), panel, y_rep, chi_rep)
+                cs_np = np.asarray(cs, np.float64)[0]
+                cs_total = cs_np if cs_total is None else cs_total + cs_np
+                ss_total += float(np.asarray(ss)[0, 0])
+            else:
+                gy_p = prog(jnp.int32(r0), panel, y_rep)
+            st._note_live(pipe.device_live_bytes + gy_p.nbytes)
+            parts.append(np.asarray(gy_p))
+    out = jax.device_put(
+        np.concatenate(parts, axis=0), ctx.sharding(ctx.rowblock_spec)
+    )
+    if fused:
+        return out, cs_total, ss_total
+    return out
+
+
 def _solve_streamed(
     ctx, p2_handle, chi, method, deflate, tol, max_steps, rho,
-    solver_batch, prefetch_depth,
+    solver_batch, prefetch_depth, use_kernel=False,
 ):
     p2, cached = p2_handle, None
     if solver_batch > 1 and is_streamable(p2_handle):
@@ -174,13 +307,25 @@ def _solve_streamed(
     den = max(float(_frob(chi)), 1e-30)
     gamma = 2.0 / (2.0 - rho)
     sigma2 = (rho / (2.0 - rho)) ** 2
+    n_rows = int(chi.shape[0])
 
     y, y_prev, p_prev = chi, chi, 1.0
     k, res = 0, math.inf
     while k < max_steps and res > tol:
         if cached is not None and k and k % solver_batch == 0:
             cached.refresh()  # batch boundary: next pass re-streams the store
-        gy = y - matmul_rowblock(ctx, p2, y, prefetch_depth=prefetch_depth) + chi
+        if use_kernel:
+            # One fused pass over the P2 stream: gy AND the residual moments
+            # of delta = chi - P2 y come out of the same kernel traversal, so
+            # each iteration reads the scratch exactly once.
+            gy, cs, ss = _kernel_stream_pass(
+                ctx, p2, y, chi, depth=prefetch_depth, fused=True
+            )
+            gy = ctx.constrain(gy.astype(chi.dtype), ctx.rowblock_spec)
+            num2 = ss - float(np.sum(cs * cs)) / n_rows if deflate else ss
+            res = math.sqrt(max(num2, 0.0)) / den
+        else:
+            gy = y - matmul_rowblock(ctx, p2, y, prefetch_depth=prefetch_depth) + chi
         if method == "richardson":
             y_new = gy
         else:
@@ -191,10 +336,13 @@ def _solve_streamed(
             p_prev = p_new
         if deflate:
             y_new = deflate_constant(ctx, y_new)
-        delta = gy - y  # residual, minus its never-decaying nullspace part
-        if deflate:
-            delta = delta - jnp.mean(delta.astype(jnp.float32), axis=0, keepdims=True)
-        res = float(_frob(delta)) / den
+        if not use_kernel:
+            delta = gy - y  # residual, minus its never-decaying nullspace part
+            if deflate:
+                delta = delta - jnp.mean(
+                    delta.astype(jnp.float32), axis=0, keepdims=True
+                )
+            res = float(_frob(delta)) / den
         y_prev, y = y, y_new
         k += 1
     return y, k, res
@@ -215,6 +363,7 @@ def solve(
     deflate: bool = True,
     solver_batch: int = 1,
     prefetch_depth: int | None = None,
+    use_gemm_kernel: bool | None = None,
 ) -> tuple[jax.Array, SolveReport]:
     """x* ~= L^+ b for each column of the row-sharded (n, k) ``b``.
 
@@ -226,6 +375,13 @@ def solve(
     ``solver_batch``/``prefetch_depth`` are the streamed path's I/O knobs
     (ignored resident -- nothing streams); see
     :func:`repro.core.solver.estimate_solution` for their semantics.
+
+    ``use_gemm_kernel`` routes the streamed iterations (and the chi build,
+    where P1 is also a handle) through the fused Pallas stream-GEMM path:
+    panels ship in stored form and each iteration is a single fused pass
+    over the P2 stream (mat-vec + update + residual moments).  ``None``
+    (default) inherits the flag the out-of-core chain build stamped on the
+    operator; resident solves ignore it.
 
     Returns ``(solution, SolveReport)``; the report carries iterations, the
     final relative preconditioned residual, and the scratch-store traffic of
@@ -253,11 +409,20 @@ def solve(
         rho = min(RHO_MAX, 1.0 - gap / RHO_GAP_SAFETY)
 
     streamed = is_streamable(op.p1) or is_streamable(op.p2)
+    use_k = bool(
+        use_gemm_kernel
+        if use_gemm_kernel is not None
+        else getattr(op, "use_gemm_kernel", False)
+    )
     st = stream_stats()
     read0, panels0 = st.bytes_read, st.panels
 
     b = ctx.constrain(b, ctx.rowblock_spec)
-    chi = matmul_rowblock(ctx, op.p1, b, prefetch_depth=depth)
+    if streamed and use_k and is_streamable(op.p1):
+        chi = _kernel_stream_pass(ctx, op.p1, b, None, depth=depth, fused=False)
+        chi = ctx.constrain(chi.astype(b.dtype), ctx.rowblock_spec)
+    else:
+        chi = matmul_rowblock(ctx, op.p1, b, prefetch_depth=depth)
     if deflate:
         chi = deflate_constant(ctx, chi)
 
@@ -265,6 +430,7 @@ def solve(
         y, iters, res = _solve_streamed(
             ctx, op.p2, chi, spec.method, deflate, tol, max_steps,
             rho or 0.0, solver_batch, depth,
+            use_kernel=use_k and is_streamable(op.p2),
         )
     else:
         prog = _resident_program(ctx, spec.method, deflate, chi)

@@ -383,10 +383,18 @@ class StreamStats:
     the codec saved.  Host-RAM replays (solver iteration batching) add
     ``panels``/``bytes_h2d`` but zero ``bytes_read`` and zero
     ``bytes_decoded`` -- nothing was served or decoded for them.
+
+    ``bytes_h2d_saved`` is the stored-width vs decoded-width transfer gap of
+    the kernel path: panels shipped in their *stored* form (bf16 bit patterns
+    decoded on-device by the stream-GEMM kernel) add the difference between
+    what a host-decoded fp32 transfer would have cost and what actually
+    crossed H2D.  Zero on the host-decode path -- the counter is exactly the
+    bandwidth the on-device decode won.
     """
 
     panels: int = 0  # row panels fetched host -> device
     bytes_h2d: int = 0  # bytes device_put by the executor
+    bytes_h2d_saved: int = 0  # decoded-width minus stored-width H2D (kernel path)
     bytes_read: int = 0  # pre-decode bytes served by the backing store
     bytes_decoded: int = 0  # post-decode host bytes produced by prefetch
     peak_live_bytes: int = 0  # max bytes of executor-owned panels live at once

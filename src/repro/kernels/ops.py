@@ -13,6 +13,7 @@ from repro.kernels.block_matmul import block_matmul
 from repro.kernels.cad_score import cad_scores, cad_scores_tile
 from repro.kernels.edge_projection import edge_projection
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.stream_gemm import fused_panel_matvec, stream_gemm
 from repro.kernels.wkv import wkv
 
 __all__ = [
@@ -21,5 +22,7 @@ __all__ = [
     "cad_scores_tile",
     "edge_projection",
     "flash_attention",
+    "fused_panel_matvec",
+    "stream_gemm",
     "wkv",
 ]

@@ -65,6 +65,13 @@ def main():
                     help="tile storage codec for --store and the --oocore-chain "
                          "scratch (bf16 halves bytes; zstd needs the optional "
                          "'zstandard' package and falls back to raw without it)")
+    ap.add_argument("--use-gemm-kernel", action="store_true",
+                    help="fused Pallas stream-GEMM path for the out-of-core "
+                         "chain and solver: panels ship in stored form (bf16 "
+                         "bit patterns decode on-device, halving H2D) and "
+                         "each streamed solve iteration is one fused pass "
+                         "over the P2 scratch; interpret-mode fallback "
+                         "off-TPU, no effect without --oocore-chain")
     ap.add_argument("--solver-batch", type=int, default=1,
                     help="solver iterations per scratch stream of P2: the "
                          "solver streams the store once per batch and replays "
@@ -102,6 +109,7 @@ def main():
                         oocore=args.oocore_chain, oocore_dir=args.oocore_dir,
                         prefetch_depth=args.prefetch_depth,
                         tile_codec=args.tile_codec, solver_batch=args.solver_batch,
+                        use_gemm_kernel=args.use_gemm_kernel,
                         solver=args.solver, solver_tol=args.solver_tol,
                         solver_max_iters=args.solver_max_iters, delta=args.delta)
 
@@ -151,12 +159,16 @@ def main():
     if args.oocore_chain:
         st = stream_stats()
         extra = " (incl. adjacency streaming)" if args.store is not None else ""
+        saved = (
+            f" ({st.bytes_h2d_saved / 1e6:.1f} MB saved by on-device decode)"
+            if st.bytes_h2d_saved else ""
+        )
         print(
             f"[caddelag] oocore chain: working matrices spilled to "
             f"{args.oocore_dir or 'host RAM'} (codec={effective_codec}, "
             f"solver_batch={args.solver_batch}); {st.panels} panels{extra}, "
             f"{st.bytes_read / 1e6:.1f} MB scratch reads, {st.bytes_h2d / 1e6:.1f} MB "
-            f"H2D, peak device panel residency "
+            f"H2D{saved}, peak device panel residency "
             f"{st.peak_live_bytes / 1e6:.2f} MB (vs ~{5 * n_nodes * n_nodes * 4 / 1e6:.2f} MB "
             f"resident chain working set)"
         )

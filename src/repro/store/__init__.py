@@ -7,6 +7,7 @@ from repro.store.pipeline import (
     DEFAULT_PREFETCH_DEPTH,
     CachingHandle,
     PanelPipeline,
+    fetch_panel_encoded_info,
     fetch_panel_info,
 )
 from repro.store.tilestore import (
@@ -31,6 +32,7 @@ __all__ = [
     "StoreManifest",
     "TileCodec",
     "TileStore",
+    "fetch_panel_encoded_info",
     "fetch_panel_info",
     "resolve_codec",
 ]

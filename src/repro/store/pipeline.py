@@ -21,7 +21,18 @@ its own ``device_put`` loop.  :class:`PanelPipeline` owns the pattern once:
 * **stats integration**: panels, H2D bytes and peak live device bytes are
   accounted exactly as the old double buffer did, plus the pre-/post-codec
   ``bytes_read`` / ``bytes_decoded`` pair, so ``stream_stats()`` tracks real
-  backing-tier traffic.
+  backing-tier traffic;
+* **encoded shipping** (``encoded=True``, the stream-GEMM kernel path):
+  panels of device-decodable codecs travel in their *stored* form -- bf16
+  tiles as raw uint16 bit patterns, half the decoded bytes over H2D, widened
+  to fp32 inside the kernel -- with the transfer gap accounted in
+  ``bytes_h2d_saved``.  Sources without an encoded read degrade to the
+  decoded panel (nothing saved, nothing broken);
+* **pinned-host staging** where the backend supports it: staged panels hop
+  through the ``pinned_host`` memory space so the H2D copy is an async DMA
+  from pinned memory instead of a pageable-numpy transfer.  Probed once per
+  pipeline; backends without a pinned memory space (CPU) silently keep the
+  pageable path (``pipeline.pinned`` says which one is active).
 
 Resident ``jax.Array`` operands are *not* routed through the thread: slicing
 them is a device-side operation and jax dispatch stays on the consumer
@@ -70,6 +81,25 @@ def fetch_panel_info(source, row0: int, height: int) -> tuple[np.ndarray, int]:
         return panel, panel.nbytes
     panel = np.asarray(source[row0 : row0 + height])
     return panel, panel.nbytes
+
+
+def fetch_panel_encoded_info(
+    source, row0: int, height: int
+) -> tuple[np.ndarray, int, int]:
+    """``(panel, stored_nbytes, decoded_nbytes)`` with the panel in its
+    device-decodable stored form where the source supports it.
+
+    The stream-GEMM kernel path: a bf16-codec handle returns raw uint16 bit
+    patterns (half the decoded bytes; the kernel widens on-device) and
+    ``decoded_nbytes`` records what a host-decoded transfer would have
+    shipped.  Sources without encoded reads fall back to the decoded panel
+    with ``decoded_nbytes == panel.nbytes`` -- nothing saved, same contract.
+    """
+    if hasattr(source, "read_panel_encoded_info"):
+        panel, stored, decoded = source.read_panel_encoded_info(row0, height)
+        return np.asarray(panel), int(stored), int(decoded)
+    panel, stored = fetch_panel_info(source, row0, height)
+    return panel, stored, panel.nbytes
 
 
 class _Ring:
@@ -132,6 +162,13 @@ class PanelPipeline:
     residency counters on ``stats`` are updated exactly as the retired
     double-buffer did.
 
+    ``encoded=True`` ships streamed panels in their device-decodable stored
+    form (bf16 -> uint16 bit patterns; see :func:`fetch_panel_encoded_info`)
+    for on-device decode by the stream-GEMM kernels; the decoded-vs-stored
+    transfer gap is accounted in ``stats.bytes_h2d_saved``.  ``pin`` controls
+    pinned-host staging of device-bound panels (None = auto: on where the
+    backend has a ``pinned_host`` memory space, silently off elsewhere).
+
     Use as a context manager (or call :meth:`close`) so an early exit --
     consumer exception, solver convergence, test breakage -- cancels the
     producer instead of leaving it blocked on a full ring.
@@ -147,6 +184,8 @@ class PanelPipeline:
         sharding=None,
         stats=None,
         device_put=None,
+        encoded: bool = False,
+        pin: bool | None = None,
     ):
         self.sources = list(sources)
         self.origins = list(origins)
@@ -157,6 +196,11 @@ class PanelPipeline:
         self.sharding = sharding
         self.stats = stats
         self._device_put = device_put
+        self.encoded = bool(encoded)
+        self._pin_want = pin is None or bool(pin)  # None/True: try; False: never
+        self.pinned = False  # True once pinned staging is probed and active
+        self._pinned_sharding = None
+        self._pin_probed = False
         self._threaded = [_is_handle(s) for s in self.sources]
         self._rings = [
             _Ring(self.depth) if threaded else None for threaded in self._threaded
@@ -181,14 +225,23 @@ class PanelPipeline:
                         continue
                     if self._cancel.is_set():
                         return
-                    panel, stored = fetch_panel_info(src, row0, self.height)
+                    if self.encoded:
+                        panel, stored, decoded = fetch_panel_encoded_info(
+                            src, row0, self.height
+                        )
+                    else:
+                        panel, stored = fetch_panel_info(src, row0, self.height)
+                        decoded = panel.nbytes
                     if self.stats is not None and stored:
                         # stored == 0 means a host-RAM replay (CachingHandle
                         # hit): no backing-tier read, no decode performed.
                         with _STATS_LOCK:
                             self.stats.bytes_read += stored
+                            # Encoded panels skip the host decode entirely:
+                            # the prefetch thread produced the stored form,
+                            # which is exactly panel.nbytes either way.
                             self.stats.bytes_decoded += panel.nbytes
-                    if not ring.put(panel):
+                    if not ring.put((panel, decoded)):
                         return  # closed under us: cancelled
         except BaseException as e:  # propagate to the consumer, then stop
             self._error = e
@@ -199,37 +252,77 @@ class PanelPipeline:
 
     # -- consumer ------------------------------------------------------------
 
-    def _next_host_bundle(self, row0: int) -> list:
-        """Panels for one origin: ring pops for handles, lazy slices else."""
-        bundle = []
+    def _next_host_bundle(self, row0: int) -> tuple[list, list]:
+        """Panels (+ decoded-byte metadata) for one origin: ring pops for
+        handles, lazy slices (decoded == None) for everything else."""
+        bundle, decs = [], []
         for src, ring in zip(self.sources, self._rings):
             if ring is None:
                 bundle.append(src[row0 : row0 + self.height])
+                decs.append(None)
                 continue
-            panel = ring.get()
-            if panel is None:
+            item = ring.get()
+            if item is None:
                 if self._error is not None:
                     raise RuntimeError(
                         f"panel prefetch failed at row {row0}"
                     ) from self._error
                 raise RuntimeError("panel pipeline closed while panels were pending")
+            panel, decoded = item
             bundle.append(panel)
-        return bundle
+            decs.append(decoded)
+        return bundle, decs
+
+    def _pin_host(self, panel: np.ndarray):
+        """Stage one host panel into pinned memory when the backend has it.
+
+        Probed once per pipeline: backends without a ``pinned_host`` memory
+        space (the CPU backend) keep the pageable-numpy path, and a probe
+        that succeeds but whose puts later fail degrades permanently rather
+        than erroring the stream.
+        """
+        if not self._pin_probed:
+            self._pin_probed = True
+            if self._pin_want:
+                try:
+                    import jax
+
+                    jax.devices()[0].memory("pinned_host")  # capability probe
+                    self._pinned_sharding = self.sharding.with_memory_kind(
+                        "pinned_host"
+                    )
+                    self.pinned = True
+                except Exception:
+                    self._pinned_sharding = None
+        if self._pinned_sharding is None:
+            return np.ascontiguousarray(panel)
+        try:
+            return self._device_put(
+                np.ascontiguousarray(panel), self._pinned_sharding
+            )
+        except Exception:
+            self._pinned_sharding = None  # partial support: fall back for good
+            self.pinned = False
+            return np.ascontiguousarray(panel)
 
     def _stage(self, row0: int) -> tuple[int, list, int]:
         """Fetch/pop one origin's bundle and (optionally) put it on device."""
-        bundle = self._next_host_bundle(row0)
+        bundle, decs = self._next_host_bundle(row0)
         if self.sharding is None:
             return row0, bundle, 0
         staged, nbytes = [], 0
         put = self._device_put
-        for panel, threaded in zip(bundle, self._threaded):
+        for panel, decoded, threaded in zip(bundle, decs, self._threaded):
             if threaded:
-                dev = put(np.ascontiguousarray(panel), self.sharding)
+                dev = put(self._pin_host(panel), self.sharding)
                 nbytes += dev.nbytes
                 if self.stats is not None:
                     self.stats.panels += 1
                     self.stats.bytes_h2d += dev.nbytes
+                    if decoded is not None and decoded > dev.nbytes:
+                        # Encoded shipping: the gap between what a host-
+                        # decoded transfer would have cost and what crossed.
+                        self.stats.bytes_h2d_saved += decoded - dev.nbytes
                 staged.append(dev)
             else:
                 staged.append(panel)  # already device-resident; sliced lazily
@@ -245,7 +338,7 @@ class PanelPipeline:
                 return
             if self.sharding is None:
                 for row0 in self.origins:
-                    yield row0, self._next_host_bundle(row0)
+                    yield row0, self._next_host_bundle(row0)[0]
                 return
             # Device mode: stage origin t+1 before yielding origin t, so the
             # H2D copy overlaps the compute the consumer dispatches on t.
@@ -337,6 +430,26 @@ class CachingHandle:
         self._cache[key] = panel
         self.fills += 1
         return panel, stored
+
+    def read_panel_encoded_info(
+        self, row0: int, height: int
+    ) -> tuple[np.ndarray, int, int]:
+        """Encoded (stored-form) read with the same replay semantics.
+
+        Cached separately from decoded panels -- a consumer mixing both read
+        forms (the kernel-path solver after an XLA-path chi build) must never
+        replay a decoded fp32 panel where uint16 bits were requested.
+        """
+        key = (row0, height, "enc")
+        cached = self._cache.get(key)
+        if cached is not None:
+            self.replays += 1
+            panel, decoded = cached
+            return panel, 0, decoded  # host-RAM replay: no backing-store bytes
+        panel, stored, decoded = fetch_panel_encoded_info(self.handle, row0, height)
+        self._cache[key] = (panel, decoded)
+        self.fills += 1
+        return panel, stored, decoded
 
     def read_panel(self, row0: int, height: int) -> np.ndarray:
         return self.read_panel_info(row0, height)[0]

@@ -96,6 +96,11 @@ class TileCodec:
 
     name: str
     suffix: str  # tile filename suffix (codec-specific: mixed dirs can't alias)
+    # Whether the *stored* form can ship to a device and decode there (the
+    # stream-GEMM kernel path): true for raw (stored == decoded) and bf16
+    # (uint16 bit patterns, widened in-kernel); false for zstd (compressed
+    # byte streams must decompress on the host).
+    device_decodable = False
 
     def encode(self, block: np.ndarray):
         raise NotImplementedError
@@ -111,6 +116,7 @@ class RawCodec(TileCodec):
     """Tiles stored verbatim (.npy, mmap-able).  Bitwise round-trip."""
 
     name, suffix = "raw", ".npy"
+    device_decodable = True  # stored form IS the decoded form
 
     def encode(self, block: np.ndarray) -> np.ndarray:
         return block
@@ -130,6 +136,7 @@ class Bf16Codec(TileCodec):
     (:class:`TileStore` rejects the combination at construction)."""
 
     name, suffix = "bf16", ".npy"
+    device_decodable = True  # uint16 bit patterns widen in-kernel
 
     def encode(self, block: np.ndarray) -> np.ndarray:
         return _f32_to_bf16_u16(block)
@@ -474,6 +481,31 @@ class TileStore:
             )
         return arr
 
+    def read_tile_stored(self, snap_id: str, r: int, c: int) -> np.ndarray:
+        """One tile in its *stored* (encoded) form, for on-device decode.
+
+        Only meaningful for device-decodable codecs (raw: the fp32 tile
+        itself; bf16: the (tile_rows, tile_rows) uint16 bit-pattern array the
+        stream-GEMM kernel widens in VMEM).  Compressed codecs have no
+        device-decodable stored form and raise.
+        """
+        if not getattr(self.codec, "device_decodable", False):
+            raise ValueError(
+                f"codec {self.codec.name!r} has no device-decodable stored form; "
+                "read_tile decodes on the host instead"
+            )
+        g = self.grid
+        if not (0 <= r < g and 0 <= c < g):
+            raise IndexError(f"tile ({r}, {c}) outside {g}x{g} grid")
+        arr = np.asarray(self._load_stored(snap_id, r, c))
+        tr = self.tile_rows
+        if arr.shape != (tr, tr):
+            raise ValueError(
+                f"tile ({r}, {c}) of {snap_id!r} stored as {arr.shape}, "
+                f"manifest says ({tr}, {tr})"
+            )
+        return arr
+
     def tile_nbytes_stored(self, snap_id: str, r: int, c: int) -> int:
         """Bytes the backing tier holds for one tile (pre-decode)."""
         if self.root is None:
@@ -712,6 +744,46 @@ class SnapshotHandle:
             for c in range(g)
         )
         return panel, stored
+
+    def read_panel_encoded_info(
+        self, row0: int, height: int
+    ) -> tuple[np.ndarray, int, int]:
+        """``(panel, stored_nbytes, decoded_nbytes)`` with the panel in a
+        *device-decodable stored form* (the stream-GEMM kernel path).
+
+        For the bf16 codec the panel is the raw uint16 bit patterns -- half
+        the decoded bytes; the H2D transfer ships the stored width and the
+        kernel widens in VMEM.  Codecs whose stored form is already decoded
+        (raw) or not device-decodable at all (zstd) fall back to the decoded
+        read, with ``decoded_nbytes == panel.nbytes`` (nothing saved).
+        """
+        store = self.store
+        if store.codec.name != "bf16":
+            panel, stored = self.read_panel_info(row0, height)
+            return panel, stored, panel.nbytes
+        tr = store.tile_rows
+        if row0 % tr or height % tr:
+            raise ValueError(
+                f"panel [{row0}:{row0 + height}] not tile-aligned (tile={tr})"
+            )
+        r_lo, r_hi = row0 // tr, (row0 + height) // tr
+        g = store.grid
+        rows = [
+            np.concatenate(
+                [store.read_tile_stored(self.snap_id, r, c) for c in range(g)], axis=1
+            )
+            if g > 1
+            else np.asarray(store.read_tile_stored(self.snap_id, r, 0))
+            for r in range(r_lo, r_hi)
+        ]
+        panel = rows[0] if len(rows) == 1 else np.concatenate(rows, axis=0)
+        stored = sum(
+            store.tile_nbytes_stored(self.snap_id, r, c)
+            for r in range(r_lo, r_hi)
+            for c in range(g)
+        )
+        decoded = panel.size * store.dtype.itemsize  # what a host decode would ship
+        return panel, stored, decoded
 
     def to_numpy(self) -> np.ndarray:
         """Gather the whole snapshot (tests / small graphs only)."""
