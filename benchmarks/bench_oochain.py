@@ -234,6 +234,8 @@ def trajectory(out_path, out=print):
     seconds, iterations, fraction-of-roofline), so the weekly CI artifact
     trends across PRs without renames.
     """
+    from repro.obs.metrics import registry as _obs_registry
+
     n, d, q, k, g = 128, 3, 6, 6, 8
     ctx = trivial_context()
     a = _sym(n, 0)
@@ -241,6 +243,7 @@ def trajectory(out_path, out=print):
     h = store.put_snapshot("t0", a)
 
     reset_stream_stats()
+    m0 = _obs_registry().snapshot()
     t0 = time.perf_counter()
     op = chain_product(ctx, h, d, oocore=True, tile_codec="bf16",
                        use_gemm_kernel=True)
@@ -279,6 +282,14 @@ def trajectory(out_path, out=print):
         "roofline_frac": roof["roofline_frac"],
         "roofline_bound": roof["bound"],
         "roofline": roof,
+        # Registry counter deltas over the whole bench (repro.obs.metrics):
+        # phase/pipeline/cache/solver telemetry.  stream.* is excluded -- the
+        # mid-bench reset_stream_stats() breaks delta monotonicity for it,
+        # and the byte counters already live in the build/solve blocks.
+        "metrics": {
+            k: v for k, v in _obs_registry().delta(m0).items()
+            if not k.startswith("stream.")
+        },
     }
     Path(out_path).write_text(json.dumps(result, indent=2))
     out(f"[bench_oochain] trajectory: build {build_s:.2f}s, solve "

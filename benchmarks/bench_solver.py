@@ -155,6 +155,8 @@ def trajectory(out_path, out=print):
     CI artifact is directly diffable across PRs: byte counters, solve seconds,
     iterations and the fraction-of-roofline all trend, none get renamed.
     """
+    from repro.obs.metrics import registry as _obs_registry
+
     n, d, k, tol, grid = 96, 4, 8, 1e-5, 8
     ctx = trivial_context()
     pts, _ = gmm_points(n, 0)
@@ -163,6 +165,7 @@ def trajectory(out_path, out=print):
     h = store.put_snapshot("a", a_np)
 
     reset_stream_stats()
+    m0 = _obs_registry().snapshot()
     t0 = time.perf_counter()
     op = chain_product(ctx, h, d, schedule="xla", oocore=True,
                        tile_codec="bf16", use_gemm_kernel=True)
@@ -201,6 +204,15 @@ def trajectory(out_path, out=print):
         "roofline_frac": roof["roofline_frac"],
         "roofline_bound": roof["bound"],
         "roofline": roof,
+        # Registry counter deltas over the whole bench (repro.obs.metrics):
+        # phase/pipeline/cache/solver telemetry.  stream.* is excluded -- the
+        # mid-bench reset_stream_stats() breaks delta monotonicity for it,
+        # and the byte counters already live in the build/solve blocks.
+        "metrics": {
+            k_: v for k_, v in _obs_registry().delta(m0).items()
+            if not k_.startswith("stream.")
+        },
+        "residuals": [float(r) for r in rep.residuals],
     }
     Path(out_path).write_text(json.dumps(result, indent=2))
     out(f"[bench_solver] trajectory: {rep.iterations} its in {solve_s:.2f}s, "

@@ -24,60 +24,18 @@ import os
 PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # bytes/s / chip
 ICI_BW = 50e9  # bytes/s / link
-DISK_BW = 2.0e9  # bytes/s sustained scratch-store read (NVMe-class)
-H2D_BW = 32e9  # bytes/s host->device staging (PCIe gen4 x16-class)
+
+# The streamed-solve roofline model moved to repro.obs.roofline (so run
+# reports can attribute a roofline fraction without importing the benchmarks
+# tree); re-exported here for the benches' historical `from roofline import`.
+from repro.obs.roofline import (  # noqa: E402,F401
+    DISK_BW,
+    H2D_BW,
+    streamed_solve_flops,
+    streamed_solve_roofline,
+)
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
-
-
-# ---------------------------------------------------------------------------
-# streamed-solve roofline: the out-of-core solve is bound by whichever of
-# disk read, H2D staging, or MXU FLOPs saturates first -- all three are
-# measured (stream_stats byte counters) or derivable (iteration count), so
-# bench_oochain / bench_solver can report measured-vs-bound directly.
-# ---------------------------------------------------------------------------
-
-
-def streamed_solve_flops(n: int, k: int, iterations: int) -> float:
-    """Dense FLOPs of a streamed solve: one (n x n) @ (n x k) mat-vec per
-    iteration plus the chi build (P1 @ b), 2nk per MAC row."""
-    return 2.0 * n * n * k * (iterations + 1)
-
-
-def streamed_solve_roofline(
-    *,
-    bytes_read: float,
-    bytes_h2d: float,
-    flops: float,
-    seconds: float,
-    disk_bw: float = DISK_BW,
-    h2d_bw: float = H2D_BW,
-    peak_flops: float = PEAK_FLOPS,
-) -> dict:
-    """Three-term bound for a streamed solve, from measured traffic.
-
-    ``bound_s = max(read/disk_bw, h2d/h2d_bw, flops/peak)`` is the fastest
-    the solve could have gone on the modeled hardware; ``roofline_frac =
-    bound_s / seconds`` is the fraction of that bound actually achieved
-    (CPU-interpret runs will sit far below 1 -- the *trajectory* of the
-    fraction and of the byte terms across PRs is the signal, the absolute
-    value only means something on real accelerator + NVMe tiers).
-    """
-    t_disk = bytes_read / disk_bw
-    t_h2d = bytes_h2d / h2d_bw
-    t_flop = flops / peak_flops
-    bound_s, bound = max(
-        (t_disk, "disk"), (t_h2d, "h2d"), (t_flop, "compute")
-    )
-    return {
-        "t_disk_s": t_disk,
-        "t_h2d_s": t_h2d,
-        "t_compute_s": t_flop,
-        "bound": bound,
-        "bound_s": bound_s,
-        "measured_s": seconds,
-        "roofline_frac": bound_s / seconds if seconds > 0 else 0.0,
-    }
 
 # active params for MoE archs (top-k experts + shared + attention + embed)
 ACTIVE_PARAMS = {

@@ -1,88 +1,182 @@
-"""CADDeLaG as a first-class training-monitoring feature.
+"""CADDeLaG watching its own run: RunReport telemetry as the anomaly input.
 
-The paper's technique is graph analytics, not a transformer layer -- so the
-framework integrates it where it IS applicable: watching a training run.
-Each logging window builds a fully-connected similarity graph over per-layer
-gradient statistics (nodes = layers x metric, edges = correlation kernel);
-CADDeLaG scores consecutive windows and flags the layers whose relational
-structure changed anomalously -- exactly the "changes in pairwise
-relationships, not in individual tuples" story of the paper, applied to
-training telemetry.  A loss-spike injection (LR x100 for one step)
-demonstrates localization.
+The paper's technique is graph analytics over *relationships*, not a model
+layer -- so the framework turns it on the richest relational stream it owns:
+its own observability layer.  A small sequence run produces a structured
+RunReport (``repro.obs.report``), whose per-transition telemetry channels --
+phase seconds (ingest/chain/solve/score), bytes moved, panels staged, solver
+iterations and residuals -- are correlated in a healthy run (more panels means
+more read bytes means more solve seconds, in proportion).  A performance fault
+breaks those *pairwise relationships* even when every individual channel stays
+in range: exactly the "changes in pairwise relationships, not in individual
+tuples" story of the paper, applied to run telemetry.
+
+Pipeline:
+
+1. run a short GMM snapshot sequence out-of-core and write a real RunReport
+   (the same document ``caddelag-run --run-report`` emits);
+2. load the report back and inject a deterministic fault into one
+   transition's record -- a scratch-read stall (bytes_read and solve seconds
+   inflate, everything else stays put), the signature of a failing disk;
+3. per sliding window of transitions, build a fully-connected similarity
+   graph over the telemetry channels (nodes = channels, edges = correlation
+   kernel over the window's z-scored values) and CADDeLaG-score consecutive
+   windows, flagging the window where the fault enters and the channels that
+   moved.
 
     PYTHONPATH=src python examples/training_telemetry_anomaly.py
 """
 
 import argparse
+import json
+import os
+import tempfile
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CommuteConfig, detect_anomalies, trivial_context
-from repro.graphs import similarity_graph
-from repro.launch.mesh import make_cpu_mesh
-from repro.models import lm
-from repro.models.common import ArchConfig
-from repro.training import OptConfig, make_train_step
-from repro.training.train_step import init_state
-from repro.data import DataConfig, host_batch
+from repro.core import (
+    CommuteConfig,
+    SequenceDetector,
+    detect_anomalies,
+    trivial_context,
+)
+from repro.graphs import gmm_snapshot_sequence, similarity_graph
+from repro.obs.report import build_run_report, save_run_report, validate_run_report
 
 
-def grad_features(grads, n_buckets: int = 8) -> np.ndarray:
-    """Per-layer-stack gradient signature: (nodes, features)."""
-    feats = []
-    for path, leaf in jax.tree_util.tree_flatten_with_path(grads)[0]:
-        a = np.asarray(leaf, np.float32).ravel()
-        if a.size < 4:
-            continue
-        q = np.quantile(np.abs(a), np.linspace(0.1, 0.99, n_buckets))
-        feats.append(np.log1p(q))
-    return np.stack(feats)
+def make_run_report(ctx, *, n: int, t_steps: int, path: str) -> dict:
+    """Run a short out-of-core sequence and round-trip its RunReport JSON."""
+    cfg = CommuteConfig(eps_rp=1e-2, d=3, q=4, k_override=6, oocore=True)
+    det = SequenceDetector(ctx, cfg, top_k=5)
+    seq = gmm_snapshot_sequence(ctx, n, t_steps, seed=0, inject_p=0.01)
+    res = det.run(seq.snapshots())
+    doc = build_run_report(
+        config={"example": "training_telemetry_anomaly", "n": n, "t_steps": t_steps},
+        result=res, n=n, k_rp=cfg.k_rp(n),
+    )
+    save_run_report(doc, path)
+    with open(path) as f:
+        doc = json.load(f)
+    validate_run_report(doc)
+    return doc
+
+
+def telemetry_channels(doc: dict) -> tuple[list[str], np.ndarray]:
+    """(channel names, (channels, transitions) value matrix) from a report."""
+    names, rows = [], []
+
+    def channel(name, values):
+        names.append(name)
+        rows.append(np.asarray(values, np.float64))
+
+    trs = doc["transitions"]
+    for ph in ("ingest", "chain", "solve", "score"):
+        channel(f"phase.{ph}.seconds", [t["phases"][ph] for t in trs])
+    for b in ("bytes_read", "bytes_decoded", "bytes_h2d"):
+        channel(f"stream.{b}", [t["bytes"][b] for t in trs])
+    channel("stream.panels", [t["panels"] for t in trs])
+    channel("solver.iterations", [sum(s["iterations"] for s in t["solves"]) for t in trs])
+    channel("solver.residual", [max((s["residual"] for s in t["solves"]), default=0.0)
+                                for t in trs])
+    channel("seconds", [t["seconds"] or 0.0 for t in trs])
+    return names, np.stack(rows)
+
+
+def inject_fault(doc: dict, at: int, factor: float = 25.0) -> dict:
+    """Scratch-read stall at transition ``at``: reads and solve wall inflate,
+    the correlated channels (panels, H2D, iterations) do not follow."""
+    tr = doc["transitions"][at]
+    tr["bytes"]["bytes_read"] = int(tr["bytes"]["bytes_read"] * factor)
+    tr["phases"]["solve"] *= factor
+    tr["seconds"] = (tr["seconds"] or 0.0) + tr["phases"]["solve"]
+    return doc
+
+
+def normalize_channels(values: np.ndarray) -> np.ndarray:
+    """Per-channel robust scaling across ALL transitions: log1p, then
+    (v - median) / MAD, clipped to +-8.
+
+    Median/MAD -- not mean/std -- on purpose: a fault must not set its own
+    channel's scale.  Deterministic channels (bytes, panels, iterations) have
+    ~zero healthy MAD, so a faulted value lands tens of MADs out, while host
+    timing jitter stays at a few; the clip keeps the similarity graph's
+    kernel edges finite.  Global -- not per-window -- so a faulted window
+    keeps its magnitude instead of being re-normalized away."""
+    v = np.log1p(np.maximum(values, 0.0))
+    med = np.median(v, axis=1, keepdims=True)
+    mad = np.median(np.abs(v - med), axis=1, keepdims=True)
+    floor = np.maximum(1e-3 * np.maximum(np.abs(med), 1.0), 1e-9)
+    return np.clip((v - med) / np.maximum(mad, floor), -8.0, 8.0)
+
+
+def window_graph(ctx, z: np.ndarray, lo: int, hi: int):
+    """Similarity graph over channels from their normalized window values."""
+    return similarity_graph(ctx, np.asarray(z[:, lo:hi], np.float32), bandwidth=1.0)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=12)
-    ap.add_argument("--spike-at", type=int, default=8)
+    ap.add_argument("--n", type=int, default=48, help="graph nodes in the source run")
+    ap.add_argument("--t-steps", type=int, default=10, help="snapshots in the source run")
+    ap.add_argument("--fault-at", type=int, default=6,
+                    help="transition index that gets the injected stall")
+    ap.add_argument("--window", type=int, default=3,
+                    help="transitions per telemetry window")
+    ap.add_argument("--report", default=None,
+                    help="reuse an existing RunReport JSON instead of running")
     args = ap.parse_args()
 
-    cfg = ArchConfig(name="mon", family="dense", n_layers=2, d_model=64, n_heads=4,
-                     n_kv_heads=2, d_ff=128, vocab=512, remat=False)
-    spec = lm.build_spec(cfg)
-    mesh = make_cpu_mesh(1, 1)
-    ocfg = OptConfig(lr=1e-3, warmup_steps=2, total_steps=args.steps)
-    params, opt = init_state(spec, mesh, ocfg)
-    dcfg = DataConfig(vocab=512, seq_len=64, global_batch=8)
-
-    grad_fn = jax.jit(jax.grad(lambda p, b: lm.loss_fn(spec, p, b)[0]))
-    step_fn, *_ = make_train_step(spec, mesh, ocfg)
-
     ctx = trivial_context()
-    ccfg = CommuteConfig(eps_rp=1e-2, d=5, q=6, schedule="xla", k_override=8)
-    prev_graph, scores_per_step = None, []
+    if args.report is not None:
+        with open(args.report) as f:
+            doc = json.load(f)
+        validate_run_report(doc)
+    else:
+        path = os.path.join(tempfile.mkdtemp(prefix="caddelag_obs_"), "report.json")
+        print(f"[telemetry] generating RunReport from a {args.t_steps}-snapshot run...")
+        doc = make_run_report(ctx, n=args.n, t_steps=args.t_steps, path=path)
+        print(f"[telemetry] report -> {path}")
 
-    with mesh:
-        for step in range(args.steps):
-            b = {k: jnp.asarray(v) for k, v in host_batch(dcfg, step).items()}
-            g = grad_fn(params, b)
-            if step == args.spike_at:  # inject a pathological step
-                g = jax.tree.map(lambda x: x * 100.0, g)
-            feats = grad_features(g)
-            graph = similarity_graph(ctx, jnp.asarray(feats), bandwidth=1.0)
-            if prev_graph is not None:
-                res = detect_anomalies(ctx, prev_graph, graph, ccfg, top_k=3)
-                top = float(np.max(np.asarray(res.scores)))
-                scores_per_step.append((step, top))
-            prev_graph = graph
-            params, opt, m = step_fn(params, opt, b)
+    n_tr = len(doc["transitions"])
+    fault_at = min(args.fault_at, n_tr - 1)
+    doc = inject_fault(doc, fault_at)
+    names, values = telemetry_channels(doc)
+    # The first transitions' timings include jit compilation (every phase
+    # program traces on first use, stragglers land in the second transition)
+    # -- a known, one-off structural break.  Drop them so the detector sees
+    # only steady-state telemetry (same reason benchmarks discard warm-up
+    # reps).
+    skip = 2 if n_tr > args.window + 2 else 0
+    values = values[:, skip:]
+    n_tr -= skip
+    fault_at -= skip
+    print(f"[telemetry] {len(names)} channels x {n_tr} steady-state "
+          f"transitions (warm-up dropped); stall injected at transition "
+          f"{fault_at + skip}")
 
-    flagged = max(scores_per_step, key=lambda t: t[1])[0]
-    for s, v in scores_per_step:
-        mark = "  <-- spike injected" if s == args.spike_at else ""
-        print(f"step {s:3d}: max CADDeLaG score {v:10.4f}{mark}")
-    print(f"\nanomaly flagged at step {flagged} "
-          f"({'CORRECT' if flagged == args.spike_at else 'expected ' + str(args.spike_at)})")
+    w = min(args.window, n_tr)
+    z = normalize_channels(values)
+    ccfg = CommuteConfig(eps_rp=1e-2, d=4, q=6, schedule="xla",
+                         k_override=min(6, len(names)))
+    prev, scored = None, []
+    for lo in range(0, n_tr - w + 1):
+        graph = window_graph(ctx, z, lo, lo + w)
+        if prev is not None:
+            res = detect_anomalies(ctx, prev[1], graph, ccfg, top_k=3)
+            scores = np.asarray(res.scores)
+            scored.append((lo, float(scores.max()), int(scores.argmax())))
+        prev = (lo, graph)
+
+    flagged_lo, _, flagged_ch = max(scored, key=lambda t: t[1])
+    for lo, v, ch in scored:
+        entered = lo + w - 1  # the transition this window newly covers
+        mark = "  <-- fault enters window" if entered == fault_at else ""
+        print(f"window [{lo},{lo + w}): max score {v:10.4f} "
+              f"(channel {names[ch]}){mark}")
+    hit = flagged_lo + w - 1 == fault_at
+    print(f"\nflagged window [{flagged_lo},{flagged_lo + w}), "
+          f"top channel {names[flagged_ch]} "
+          f"({'CORRECT' if hit else 'expected window ending at ' + str(fault_at)})")
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.distmatrix import DistContext
 from repro.core.embedding import CommuteConfig, Embedding, commute_time_embedding
 from repro.core.tiles import is_streamable, tile_map, tile_stream
+from repro.obs import phase
 
 
 def _cad_scores_body(tile, b1, b2, z1, z2, v1, v2):
@@ -75,26 +76,29 @@ def node_anomaly_scores(
     streamed = is_streamable(a1) or is_streamable(a2)
     kwargs = {"prefetch_depth": prefetch_depth} if streamed else {}
     runner = tile_stream if streamed else tile_map
-    return runner(
-        ctx,
-        _cad_scores_kernel_body if use_kernel else _cad_scores_body,
-        a1,
-        a2,
-        z1,
-        z2,
-        e1.vol,
-        e2.vol,
-        in_specs=(
-            ctx.matrix_spec,
-            ctx.matrix_spec,
-            P(None, None),
-            P(None, None),
-            P(),
-            P(),
-        ),
-        reduce="cols",
-        **kwargs,
-    )
+    with phase("score", streamed=streamed, kernel=use_kernel) as sp:
+        scores = runner(
+            ctx,
+            _cad_scores_kernel_body if use_kernel else _cad_scores_body,
+            a1,
+            a2,
+            z1,
+            z2,
+            e1.vol,
+            e2.vol,
+            in_specs=(
+                ctx.matrix_spec,
+                ctx.matrix_spec,
+                P(None, None),
+                P(None, None),
+                P(),
+                P(),
+            ),
+            reduce="cols",
+            **kwargs,
+        )
+        sp.fence(scores)
+    return scores
 
 
 def top_anomalies(scores: jax.Array, k: int):

@@ -135,7 +135,7 @@ def _matmul_summa(ctx: DistContext, a, b, out_dtype, use_kernel=False):
         row_ax, col_ax = ctx.row_axes, ctx.col_axes
 
         def local(a_blk, b_blk):
-            program_cache_stats().traces += 1
+            program_cache_stats().note_trace()
             # Row panel of A (gather along column axis), column panel of B.
             a_panel = lax.all_gather(a_blk, col_ax, axis=1, tiled=True)
             b_panel = lax.all_gather(b_blk, row_ax, axis=0, tiled=True)
@@ -175,7 +175,7 @@ def _matmul_cannon(ctx: DistContext, a, b, out_dtype, use_kernel=False):
         skew_a, skew_b, shift_a, shift_b = _cannon_perms(R, C)
 
         def local(a_blk, b_blk):
-            program_cache_stats().traces += 1
+            program_cache_stats().note_trace()
             a_blk = lax.ppermute(a_blk, axes, skew_a)
             b_blk = lax.ppermute(b_blk, axes, skew_b)
             # pcast-to-varying: the accumulator must carry the same

@@ -26,6 +26,7 @@ from repro.core.chain import ChainOperator, chain_product
 from repro.core.distmatrix import DistContext
 from repro.core.solvers import SolveReport, SolverSpec, solve
 from repro.core.tiles import is_streamable, tile_map, tile_stream
+from repro.obs import phase
 
 
 @dataclass(frozen=True)
@@ -160,33 +161,41 @@ def commute_time_embedding(
     n = a.shape[0]
     k = cfg.k_rp(n)
     if op is None:
-        op = chain_product(
-            ctx,
-            a,
-            cfg.d,
-            schedule=cfg.schedule,
-            dtype=cfg.dtype,
-            deflate=cfg.deflate,
-            fuse_l=cfg.fuse_l,
-            use_kernel=use_kernel,
-            oocore=cfg.oocore,
-            oocore_work=cfg.oocore_dir,
-            oocore_panel_rows=cfg.oocore_panel_rows,
-            tile_codec=cfg.tile_codec,
-            prefetch_depth=cfg.prefetch_depth,
-            use_gemm_kernel=cfg.use_gemm_kernel,
+        with phase("chain", n=n, d=cfg.d, oocore=cfg.oocore) as sp:
+            op = chain_product(
+                ctx,
+                a,
+                cfg.d,
+                schedule=cfg.schedule,
+                dtype=cfg.dtype,
+                deflate=cfg.deflate,
+                fuse_l=cfg.fuse_l,
+                use_kernel=use_kernel,
+                oocore=cfg.oocore,
+                oocore_work=cfg.oocore_dir,
+                oocore_panel_rows=cfg.oocore_panel_rows,
+                tile_codec=cfg.tile_codec,
+                prefetch_depth=cfg.prefetch_depth,
+                use_gemm_kernel=cfg.use_gemm_kernel,
+            )
+            sp.fence(op.p2 if not is_streamable(op.p2) else op.vol)
+    with phase("ingest", n=n, k=k) as sp:
+        y = edge_projection(
+            ctx, a, cfg.seed, k, prefetch_depth=cfg.prefetch_depth
         )
-    y = edge_projection(ctx, a, cfg.seed, k, prefetch_depth=cfg.prefetch_depth)
-    z, report = solve(
-        ctx,
-        op,
-        y,
-        cfg.solver_spec(),
-        fixed_q=cfg.q,
-        deflate=cfg.deflate,
-        solver_batch=cfg.solver_batch,
-        prefetch_depth=cfg.prefetch_depth,
-    )
+        sp.fence(y)
+    with phase("solve", n=n, k=k, method=cfg.solver) as sp:
+        z, report = solve(
+            ctx,
+            op,
+            y,
+            cfg.solver_spec(),
+            fixed_q=cfg.q,
+            deflate=cfg.deflate,
+            solver_batch=cfg.solver_batch,
+            prefetch_depth=cfg.prefetch_depth,
+        )
+        sp.fence(z)
     return Embedding(z=z, vol=op.vol, op=op, report=report)
 
 

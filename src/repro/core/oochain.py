@@ -47,6 +47,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core import laplacian as lap
+from repro.obs import trace as obs_trace
 from repro.core.chain import ChainOperator
 from repro.core.distmatrix import DistContext
 from repro.core.tiles import (
@@ -144,7 +145,7 @@ def _kernel_gemm_program(ctx, positive: bool, blk_dtype: str, right_dtype: str,
         from repro.kernels.ops import stream_gemm
 
         def local(acc, blk, right):
-            program_cache_stats().traces += 1
+            program_cache_stats().note_trace()
             a_pan = blk
             if ctx.n_col_shards > 1:
                 a_pan = lax.all_gather(a_pan, ctx.col_axes, axis=1, tiled=True)
@@ -272,7 +273,7 @@ def chain_product_oocore(
     origins = list(range(0, n, ph))
 
     st = stream_stats()
-    st.calls += 1
+    st.add(calls=1)
     sharding = ctx.sharding(ctx.matrix_spec)
     rep = ctx.sharding(P(None))
 
@@ -283,11 +284,11 @@ def chain_product_oocore(
 
     def put_panel(host, decoded_nbytes: int | None = None):
         dev = jax.device_put(np.ascontiguousarray(np.asarray(host)), sharding)
-        st.panels += 1
-        st.bytes_h2d += dev.nbytes
+        inc = {"panels": 1, "bytes_h2d": dev.nbytes}
         if decoded_nbytes is not None and decoded_nbytes > dev.nbytes:
             # Encoded (stored-width) put: the gap vs a host-decoded transfer.
-            st.bytes_h2d_saved += decoded_nbytes - dev.nbytes
+            inc["bytes_h2d_saved"] = decoded_nbytes - dev.nbytes
+        st.add(**inc)
         return dev
 
     def stream(source, walk=None, *, device: bool, encoded: bool = False):
@@ -304,7 +305,8 @@ def chain_product_oocore(
 
     def unary_pass(out_id: str, source, fn, *args):
         """Stream panels through a jitted panel program into the store."""
-        with work.writer(out_id) as w, stream(source, device=True) as pipe:
+        with obs_trace.span("oochain.unary", out=out_id), \
+                work.writer(out_id) as w, stream(source, device=True) as pipe:
             for r0, (blk,) in pipe:
                 # Resident sources bypass the pipeline's staging (and its
                 # residency accounting): count the panel we just put ourselves.
@@ -335,7 +337,8 @@ def chain_product_oocore(
         step = _gemm_step if sign > 0 else _gemm_step_neg
         nested = [k0 for _ in origins for k0 in origins]  # right walk, per row
         dec_panel = ph * n * 4  # fp32 bytes a host-decoded panel would ship
-        with work.writer(out_id) as w, \
+        with obs_trace.span("oochain.gemm", out=out_id, panels=len(origins)), \
+                work.writer(out_id) as w, \
                 stream(left_h, device=False, encoded=use_gemm_kernel) as lpipe, \
                 stream(right_h, nested, device=True, encoded=use_gemm_kernel) as rpipe:
             right_iter = iter(rpipe)
@@ -373,7 +376,8 @@ def chain_product_oocore(
     # S (= T at level 0) and P0 = I + S, in one pass over A.  Level ids use a
     # "lvl" infix so they can never collide with the final P1 / P2 outputs.
     s_id, p_id = tag + "Tlvl0", tag + "Plvl0"
-    with work.writer(s_id) as ws, work.writer(p_id) as wp, \
+    with obs_trace.span("oochain.s_build", n=n, panels=len(origins)), \
+            work.writer(s_id) as ws, work.writer(p_id) as wp, \
             stream(a, device=True) as apipe:
         for r0, (blk,) in apipe:
             blk = blk if is_streamable(a) else put_panel(blk)
@@ -414,7 +418,8 @@ def chain_product_oocore(
     # the rest).  The solve driver reads it for Chebyshev intervals.
     from repro.core.solvers.power import estimate_rho
 
-    rho = estimate_rho(ctx, p2_h, prefetch_depth=prefetch_depth)
+    with obs_trace.span("oochain.estimate_rho", n=n):
+        rho = estimate_rho(ctx, p2_h, prefetch_depth=prefetch_depth)
     return ChainOperator(
         p1=p1_h, p2=p2_h, deg=deg, vol=vol,
         prefetch_depth=prefetch_depth or DEFAULT_PREFETCH_DEPTH,

@@ -41,6 +41,8 @@ from repro.core import chain
 from repro.core.cad import CADResult, node_anomaly_scores, top_anomalies
 from repro.core.distmatrix import DistContext
 from repro.core.embedding import CommuteConfig, Embedding, commute_time_embedding
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import REGISTRY as _OBS_REGISTRY
 
 
 @dataclass
@@ -54,6 +56,11 @@ class SequenceResult:
     n_snapshots: int
     chain_builds: int  # chain_product invocations during run()
     transition_seconds: list[float] = field(default_factory=list)
+    # Registry counter deltas (see repro.obs.metrics) per scored transition,
+    # aligned with ``transitions``; ``warmup_metrics`` is the delta of the
+    # first push (embedding build only -- nothing scored yet).
+    transition_metrics: list[dict] = field(default_factory=list)
+    warmup_metrics: dict | None = None
 
 
 class SequenceDetector:
@@ -87,6 +94,8 @@ class SequenceDetector:
         self._t = 0  # snapshots consumed
         self._transitions: list[CADResult] = []
         self._seconds: list[float] = []
+        self._metrics: list[dict] = []
+        self._warmup_metrics: dict | None = None
         self._builds0 = chain.chain_build_count()
         self._g_val: np.ndarray | None = None
         self._g_idx: np.ndarray | None = None
@@ -155,29 +164,37 @@ class SequenceDetector:
         operator was built when *it* was pushed.
         """
         t0 = time.perf_counter()
-        emb = commute_time_embedding(self.ctx, a, self.cfg, use_kernel=self.use_kernel)
-        out = None
-        if self._prev is not None:
-            a_prev, e_prev = self._prev
-            scores = node_anomaly_scores(
-                self.ctx,
-                a_prev,
-                a,
-                e_prev,
-                emb,
-                use_kernel=self.use_kernel,
-                prefetch_depth=self.cfg.prefetch_depth,
+        m0 = _OBS_REGISTRY.snapshot()
+        with obs_trace.span("sequence.push", t=self._t) as push_sp:
+            emb = commute_time_embedding(
+                self.ctx, a, self.cfg, use_kernel=self.use_kernel
             )
-            idx, vals = top_anomalies(scores, self.top_k)
-            out = CADResult(
-                scores=scores, top_idx=idx, top_val=vals,
-                solve_reports=(e_prev.report, emb.report),
-            )
-            jax.block_until_ready(out.scores)
-            self._merge_topk(idx, vals, self._t - 1)
-            self._transitions.append(out)
-            self._seconds.append(time.perf_counter() - t0)
-            self._release(a_prev, e_prev)
+            out = None
+            if self._prev is not None:
+                a_prev, e_prev = self._prev
+                scores = node_anomaly_scores(
+                    self.ctx,
+                    a_prev,
+                    a,
+                    e_prev,
+                    emb,
+                    use_kernel=self.use_kernel,
+                    prefetch_depth=self.cfg.prefetch_depth,
+                )
+                idx, vals = top_anomalies(scores, self.top_k)
+                out = CADResult(
+                    scores=scores, top_idx=idx, top_val=vals,
+                    solve_reports=(e_prev.report, emb.report),
+                )
+                jax.block_until_ready(out.scores)
+                self._merge_topk(idx, vals, self._t - 1)
+                self._transitions.append(out)
+                self._seconds.append(time.perf_counter() - t0)
+                self._metrics.append(_OBS_REGISTRY.delta(m0))
+                self._release(a_prev, e_prev)
+            else:
+                self._warmup_metrics = _OBS_REGISTRY.delta(m0)
+            push_sp.annotate(scored=out is not None)
         self._prev = (a, emb)
         self._t += 1
         return out
@@ -194,6 +211,8 @@ class SequenceDetector:
             n_snapshots=self._t,
             chain_builds=chain.chain_build_count() - self._builds0,
             transition_seconds=self._seconds,
+            transition_metrics=self._metrics,
+            warmup_metrics=self._warmup_metrics,
         )
 
     def run(self, snapshots: Iterable[jax.Array]) -> SequenceResult:

@@ -106,6 +106,8 @@ class SolveReport:
     rho: float | None = None  # Chebyshev interval bound used (inflated estimate)
     bytes_read: int = 0  # scratch bytes served during the solve
     panels: int = 0  # panels staged during the solve
+    bytes_h2d: int = 0  # host-to-device bytes staged during the solve
+    residuals: tuple = ()  # per-iteration residual series (stopping metric)
 
     def summary(self) -> str:
         """One-line telemetry, e.g. for the CLI's per-transition printout."""

@@ -55,6 +55,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.distmatrix import DistContext, matmul_rowblock
 from repro.core.solvers.base import SolveReport, SolverSpec
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import REGISTRY as _OBS_REGISTRY
 from repro.core.tiles import (
     _axes_index,
     cached_program,
@@ -73,6 +75,13 @@ from repro.core.tiles import (
 # near 1 would blow straight through 1 and degrade the interval to useless).
 RHO_GAP_SAFETY = 1.1
 RHO_MAX = 0.999
+
+# Fixed-size residual-history buffer carried through the resident while_loop
+# (a traced loop cannot append to a Python list).  Comfortably above
+# TOLERANCE_ITER_CAP (300), so in practice the full per-iteration residual
+# series survives; a hypothetical longer run wraps the ring rather than
+# growing the carry.
+RES_HIST_CAP = 512
 
 
 def deflate_constant(ctx: DistContext, y: jax.Array) -> jax.Array:
@@ -127,11 +136,11 @@ def _resident_program(ctx: DistContext, method: str, deflate: bool, chi):
             sigma2 = (rho / (2.0 - rho)) ** 2
 
             def cond(carry):
-                _, _, k, res, _ = carry
+                _, _, k, res, _, _ = carry
                 return jnp.logical_and(k < max_steps, res > tol)
 
             def body(carry):
-                y, y_prev, k, _, p_prev = carry
+                y, y_prev, k, _, p_prev, hist = carry
                 gy = y - matvec(p2, y) + chi  # G y + chi; gy - y is the residual
                 if method == "richardson":
                     y_new, p_new = gy, p_prev
@@ -151,11 +160,17 @@ def _resident_program(ctx: DistContext, method: str, deflate: bool, chi):
                         delta.astype(jnp.float32), axis=0, keepdims=True
                     )
                 res = _frob(delta) / den
-                return (y_new, y, k + jnp.int32(1), res, p_new)
+                hist = lax.dynamic_update_index_in_dim(
+                    hist, res, jnp.mod(k, RES_HIST_CAP), 0
+                )
+                return (y_new, y, k + jnp.int32(1), res, p_new, hist)
 
-            init = (chi, chi, jnp.int32(0), jnp.float32(jnp.inf), jnp.float32(1.0))
-            y, _, k, res, _ = lax.while_loop(cond, body, init)
-            return y, k, res
+            init = (
+                chi, chi, jnp.int32(0), jnp.float32(jnp.inf), jnp.float32(1.0),
+                jnp.zeros((RES_HIST_CAP,), jnp.float32),
+            )
+            y, _, k, res, _, hist = lax.while_loop(cond, body, init)
+            return y, k, res, hist
 
         return jax.jit(run)
 
@@ -195,7 +210,7 @@ def _kernel_panel_program(ctx, ph: int, n: int, k: int, panel_dtype: str,
         pr, pc = ph // R, n // C
 
         def local(r0, p_blk, y_rep, *rest):
-            program_cache_stats().traces += 1
+            program_cache_stats().note_trace()
             row0 = r0 + _axes_index(ctx, ctx.row_axes) * pr
             if C == 1:
                 y_cols = y_rep
@@ -260,7 +275,7 @@ def _kernel_stream_pass(ctx, handle, y, chi, *, depth, fused):
     if n % ph:
         raise ValueError(f"panel height {ph} does not tile n={n}")
     st = stream_stats()
-    st.calls += 1
+    st.add(calls=1)
     sharding = ctx.sharding(ctx.matrix_spec)
     y_rep = ctx.constrain(y.astype(jnp.float32), P(None, None))
     chi_rep = (
@@ -311,6 +326,7 @@ def _solve_streamed(
 
     y, y_prev, p_prev = chi, chi, 1.0
     k, res = 0, math.inf
+    res_hist: list[float] = []
     while k < max_steps and res > tol:
         if cached is not None and k and k % solver_batch == 0:
             cached.refresh()  # batch boundary: next pass re-streams the store
@@ -345,7 +361,8 @@ def _solve_streamed(
             res = float(_frob(delta)) / den
         y_prev, y = y, y_new
         k += 1
-    return y, k, res
+        res_hist.append(float(res))
+    return y, k, res, res_hist
 
 
 # ---------------------------------------------------------------------------
@@ -415,30 +432,41 @@ def solve(
         else getattr(op, "use_gemm_kernel", False)
     )
     st = stream_stats()
-    read0, panels0 = st.bytes_read, st.panels
+    read0, panels0, h2d0 = st.bytes_read, st.panels, st.bytes_h2d
 
-    b = ctx.constrain(b, ctx.rowblock_spec)
-    if streamed and use_k and is_streamable(op.p1):
-        chi = _kernel_stream_pass(ctx, op.p1, b, None, depth=depth, fused=False)
-        chi = ctx.constrain(chi.astype(b.dtype), ctx.rowblock_spec)
-    else:
-        chi = matmul_rowblock(ctx, op.p1, b, prefetch_depth=depth)
-    if deflate:
-        chi = deflate_constant(ctx, chi)
+    with obs_trace.span(
+        "solve", method=spec.method, streamed=streamed
+    ) as sp:
+        b = ctx.constrain(b, ctx.rowblock_spec)
+        if streamed and use_k and is_streamable(op.p1):
+            chi = _kernel_stream_pass(
+                ctx, op.p1, b, None, depth=depth, fused=False
+            )
+            chi = ctx.constrain(chi.astype(b.dtype), ctx.rowblock_spec)
+        else:
+            chi = matmul_rowblock(ctx, op.p1, b, prefetch_depth=depth)
+        if deflate:
+            chi = deflate_constant(ctx, chi)
 
-    if streamed:
-        y, iters, res = _solve_streamed(
-            ctx, op.p2, chi, spec.method, deflate, tol, max_steps,
-            rho or 0.0, solver_batch, depth,
-            use_kernel=use_k and is_streamable(op.p2),
-        )
-    else:
-        prog = _resident_program(ctx, spec.method, deflate, chi)
-        y, k_arr, res_arr = prog(
-            op.p2, chi, jnp.float32(tol), jnp.int32(max_steps),
-            jnp.float32(rho or 0.0),
-        )
-        iters, res = int(k_arr), float(res_arr)
+        if streamed:
+            y, iters, res, res_hist = _solve_streamed(
+                ctx, op.p2, chi, spec.method, deflate, tol, max_steps,
+                rho or 0.0, solver_batch, depth,
+                use_kernel=use_k and is_streamable(op.p2),
+            )
+        else:
+            prog = _resident_program(ctx, spec.method, deflate, chi)
+            y, k_arr, res_arr, hist_arr = prog(
+                op.p2, chi, jnp.float32(tol), jnp.int32(max_steps),
+                jnp.float32(rho or 0.0),
+            )
+            iters, res = int(k_arr), float(res_arr)
+            res_hist = [
+                float(r)
+                for r in np.asarray(hist_arr)[: min(iters, RES_HIST_CAP)]
+            ]
+        sp.annotate(iterations=iters, residual=res)
+        sp.fence(y)
 
     st = stream_stats()
     report = SolveReport(
@@ -451,6 +479,14 @@ def solve(
         streamed=streamed,
         rho=rho,
         bytes_read=st.bytes_read - read0,
+        bytes_h2d=st.bytes_h2d - h2d0,
         panels=st.panels - panels0,
+        residuals=tuple(res_hist),
     )
+    _OBS_REGISTRY.add_named({
+        "solver.solves": 1.0,
+        "solver.iterations": float(iters),
+        "solver.not_converged": 0.0 if report.converged else 1.0,
+    })
+    _OBS_REGISTRY.extend("solver.residuals", res_hist)
     return y, report

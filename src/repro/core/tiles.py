@@ -41,6 +41,10 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import REGISTRY as _OBS_REGISTRY
+from repro.obs.metrics import MetricsRegistry
+
 # ---------------------------------------------------------------------------
 # version compat: manual-sharding API surface
 # ---------------------------------------------------------------------------
@@ -111,21 +115,56 @@ else:  # old jax with check_rep=False: varying types are not tracked at all
 # arrays, gets a fresh identity and safely misses).
 
 
-@dataclass
 class ProgramCacheStats:
     """Process-wide compile-cache accounting (see :func:`program_cache_stats`).
 
     ``traces`` counts Python executions of tile-program bodies -- a body runs
     in Python only while jax traces it, so a steady-state snapshot push that
     adds zero traces provably reused every compiled tile program.
+
+    A live view over ``program_cache.*`` counters in a
+    :class:`repro.obs.metrics.MetricsRegistry` (the process registry by
+    default, so run reports read the same numbers).  Reads are properties,
+    mutation goes through the atomic ``note_*`` methods, and
+    :func:`reset_program_cache_stats` zeroes the counters *in place* -- held
+    references stay live across resets.
     """
 
-    hits: int = 0  # cache hits: program reused, no retrace
-    misses: int = 0  # cache misses: a new program was built (and traced)
-    traces: int = 0  # Python trace executions of tile-program bodies
+    __slots__ = ("_reg",)
+    _PREFIX = "program_cache."
+
+    def __init__(self, registry: MetricsRegistry | None = None):
+        self._reg = registry if registry is not None else MetricsRegistry()
+
+    @property
+    def hits(self) -> int:  # cache hits: program reused, no retrace
+        return int(self._reg.value("program_cache.hits"))
+
+    @property
+    def misses(self) -> int:  # cache misses: a new program was built (and traced)
+        return int(self._reg.value("program_cache.misses"))
+
+    @property
+    def traces(self) -> int:  # Python trace executions of tile-program bodies
+        return int(self._reg.value("program_cache.traces"))
+
+    def note_hit(self) -> None:
+        self._reg.inc("program_cache.hits")
+
+    def note_miss(self) -> None:
+        self._reg.inc("program_cache.misses")
+
+    def note_trace(self) -> None:
+        self._reg.inc("program_cache.traces")
+
+    def __repr__(self) -> str:
+        return (
+            f"ProgramCacheStats(hits={self.hits}, misses={self.misses}, "
+            f"traces={self.traces})"
+        )
 
 
-_PROGRAM_STATS = ProgramCacheStats()
+_PROGRAM_STATS = ProgramCacheStats(registry=_OBS_REGISTRY)
 _PROGRAM_CACHE: OrderedDict = OrderedDict()
 _PROGRAM_CACHE_MAX = 512  # per-call lambdas miss forever; bound their footprint
 
@@ -136,8 +175,8 @@ def program_cache_stats() -> ProgramCacheStats:
 
 
 def reset_program_cache_stats() -> ProgramCacheStats:
-    global _PROGRAM_STATS
-    _PROGRAM_STATS = ProgramCacheStats()
+    """Zero the counters in place (held references observe the reset)."""
+    _PROGRAM_STATS._reg.reset(ProgramCacheStats._PREFIX)
     return _PROGRAM_STATS
 
 
@@ -159,11 +198,11 @@ def cached_program(key: tuple, build: Callable[[], Callable]) -> Callable:
     if prog is None:
         while len(_PROGRAM_CACHE) >= _PROGRAM_CACHE_MAX:
             _PROGRAM_CACHE.popitem(last=False)  # least recently used
-        _PROGRAM_STATS.misses += 1
+        _PROGRAM_STATS.note_miss()
         prog = build()
         _PROGRAM_CACHE[key] = prog
     else:
-        _PROGRAM_STATS.hits += 1
+        _PROGRAM_STATS.note_hit()
         _PROGRAM_CACHE.move_to_end(key)
     return prog
 
@@ -243,7 +282,7 @@ def _tile_local(
     mesh_axes = tuple(ctx.row_axes) + tuple(ctx.col_axes)
 
     def local(*args):
-        _PROGRAM_STATS.traces += 1  # body runs in Python only while tracing
+        _PROGRAM_STATS.note_trace()  # body runs in Python only while tracing
         if with_origin:
             origin, *blocks = args
         else:
@@ -371,7 +410,6 @@ def is_streamable(x) -> bool:
     )
 
 
-@dataclass
 class StreamStats:
     """Process-wide accounting of the streaming executors (see stream_stats()).
 
@@ -390,21 +428,85 @@ class StreamStats:
     what a host-decoded fp32 transfer would have cost and what actually
     crossed H2D.  Zero on the host-decode path -- the counter is exactly the
     bandwidth the on-device decode won.
+
+    A live view over ``stream.*`` counters in a
+    :class:`repro.obs.metrics.MetricsRegistry`.  The process-wide instance
+    behind :func:`stream_stats` is backed by the process registry (so run
+    reports read the very same counters); a bare ``StreamStats()`` gets its
+    own private registry for isolated accounting (tests pass one straight to
+    a :class:`~repro.store.PanelPipeline`).  All mutation goes through the
+    atomic :meth:`add`, and :func:`reset_stream_stats` zeroes the counters
+    *in place* -- a prefetch thread mid-``add`` can no longer race a reset
+    into lost updates, and references held across a reset stay live.
     """
 
-    panels: int = 0  # row panels fetched host -> device
-    bytes_h2d: int = 0  # bytes device_put by the executor
-    bytes_h2d_saved: int = 0  # decoded-width minus stored-width H2D (kernel path)
-    bytes_read: int = 0  # pre-decode bytes served by the backing store
-    bytes_decoded: int = 0  # post-decode host bytes produced by prefetch
-    peak_live_bytes: int = 0  # max bytes of executor-owned panels live at once
-    calls: int = 0  # tile_stream invocations
+    __slots__ = ("_reg",)
+    _PREFIX = "stream."
+    FIELDS = (
+        "panels",  # row panels fetched host -> device
+        "bytes_h2d",  # bytes device_put by the executor
+        "bytes_h2d_saved",  # decoded-width minus stored-width H2D (kernel path)
+        "bytes_read",  # pre-decode bytes served by the backing store
+        "bytes_decoded",  # post-decode host bytes produced by prefetch
+        "calls",  # tile_stream invocations
+    )
+
+    def __init__(self, registry: MetricsRegistry | None = None):
+        self._reg = registry if registry is not None else MetricsRegistry()
+
+    def add(self, **fields: int) -> None:
+        """Atomically increment counters: ``st.add(panels=1, bytes_h2d=nb)``."""
+        for name in fields:
+            if name not in StreamStats.FIELDS:
+                raise AttributeError(f"unknown stream counter {name!r}")
+        self._reg.add_named(
+            {f"stream.{name}": v for name, v in fields.items()}
+        )
 
     def _note_live(self, live: int) -> None:
-        self.peak_live_bytes = max(self.peak_live_bytes, live)
+        self._reg.max_gauge("stream.peak_live_bytes", live)
+
+    @property
+    def panels(self) -> int:
+        return int(self._reg.value("stream.panels"))
+
+    @property
+    def bytes_h2d(self) -> int:
+        return int(self._reg.value("stream.bytes_h2d"))
+
+    @property
+    def bytes_h2d_saved(self) -> int:
+        return int(self._reg.value("stream.bytes_h2d_saved"))
+
+    @property
+    def bytes_read(self) -> int:
+        return int(self._reg.value("stream.bytes_read"))
+
+    @property
+    def bytes_decoded(self) -> int:
+        return int(self._reg.value("stream.bytes_decoded"))
+
+    @property
+    def calls(self) -> int:
+        return int(self._reg.value("stream.calls"))
+
+    @property
+    def peak_live_bytes(self) -> int:
+        return int(self._reg.gauge("stream.peak_live_bytes"))
+
+    def snapshot(self) -> dict[str, int]:
+        """One atomic dict of every counter (plus the peak gauge)."""
+        snap = self._reg.snapshot()
+        out = {f: int(snap.counter(f"stream.{f}")) for f in StreamStats.FIELDS}
+        out["peak_live_bytes"] = int(snap.gauges.get("stream.peak_live_bytes", 0))
+        return out
+
+    def __repr__(self) -> str:
+        fields = ", ".join(f"{k}={v}" for k, v in self.snapshot().items())
+        return f"StreamStats({fields})"
 
 
-_STREAM_STATS = StreamStats()
+_STREAM_STATS = StreamStats(registry=_OBS_REGISTRY)
 
 
 def stream_stats() -> StreamStats:
@@ -413,8 +515,15 @@ def stream_stats() -> StreamStats:
 
 
 def reset_stream_stats() -> StreamStats:
-    global _STREAM_STATS
-    _STREAM_STATS = StreamStats()
+    """Zero the counters in place, atomically.
+
+    The returned object is the same live instance every caller (and every
+    in-flight :class:`~repro.store.PanelPipeline`) already holds -- the reset
+    cannot strand a pipeline on a stale counter object, and a concurrent
+    ``add`` from the prefetch thread lands entirely before or entirely after
+    the reset, never interleaved with it.
+    """
+    _STREAM_STATS._reg.reset(StreamStats._PREFIX)
     return _STREAM_STATS
 
 
@@ -551,7 +660,7 @@ def tile_stream(
     )
 
     stats = _STREAM_STATS
-    stats.calls += 1
+    stats.add(calls=1)
     consts = [op for op, src in zip(operands, sources) if src is None]
     panel_sharding = ctx.sharding(ctx.matrix_spec)
 
@@ -596,16 +705,23 @@ def tile_stream(
     from repro.store.pipeline import PanelPipeline  # deferred: store is optional
 
     origins = list(range(0, n0, panel_rows))
-    with PanelPipeline(
-        [src.x for src in sources if src is not None],
-        origins,
-        panel_rows,
-        depth=prefetch_depth,
-        sharding=panel_sharding,
-        stats=stats,
-    ) as pipe:
-        for r0, panels in pipe:
-            consume(r0, panels)
+    with obs_trace.span(
+        "tile_stream",
+        body=getattr(fn, "__name__", repr(fn)),
+        n0=n0,
+        n1=n1,
+        panels=len(origins),
+    ):
+        with PanelPipeline(
+            [src.x for src in sources if src is not None],
+            origins,
+            panel_rows,
+            depth=prefetch_depth,
+            sharding=panel_sharding,
+            stats=stats,
+        ) as pipe:
+            for r0, panels in pipe:
+                consume(r0, panels)
 
     if reduce == "cols":
         if len(reduced_outs) == 1:

@@ -94,7 +94,25 @@ def main():
     ap.add_argument("--delta", type=float, default=None,
                     help="paper accuracy parameter: bounds iterations at "
                          "q = ceil(log 1/delta) when no explicit cap is given")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a Chrome trace-event JSON of the run "
+                         "(Perfetto / chrome://tracing loadable); enables "
+                         "span fencing, so phase spans measure honest device "
+                         "walls at the cost of extra synchronization")
+    ap.add_argument("--run-report", default=None, metavar="OUT.json",
+                    help="write a structured RunReport JSON (schema-versioned; "
+                         "see repro.obs.report): per-transition phase/bytes/"
+                         "solver telemetry, cache hit rates, roofline fraction")
+    ap.add_argument("--strict-convergence", action="store_true",
+                    help="exit nonzero (code 2) if any transition's solve "
+                         "finished NOT-CONVERGED")
     args = ap.parse_args()
+
+    from repro.obs import enable_tracing, tracer
+    from repro.obs.report import build_run_report, save_run_report
+
+    if args.trace is not None:
+        enable_tracing(fence=True)
 
     # Resolve the codec once up front: a backend-less zstd request degrades to
     # raw (with a warning) and everything downstream -- scratch stores, the
@@ -208,6 +226,35 @@ def main():
     g_step = np.asarray(res.global_top_step).tolist()
     print(f"[caddelag] sequence-wide top-{args.top_k}: "
           f"{[f'{i}@t{s}' for i, s in zip(g_idx, g_step)]}")
+
+    # Convergence summary: count transitions where any endpoint solve ended
+    # NOT-CONVERGED (the per-transition lines above flag which ones).
+    bad = sum(
+        1 for r in res.transitions
+        if any(rep is not None and not rep.converged for rep in r.solve_reports)
+    )
+    if bad:
+        print(
+            f"[caddelag] WARNING: {bad}/{len(res.transitions)} transitions "
+            f"had a NOT-CONVERGED solve"
+        )
+
+    if args.run_report is not None:
+        doc = build_run_report(
+            config={k.replace("-", "_"): v for k, v in vars(args).items()},
+            result=res,
+            n=n_nodes,
+            k_rp=cfg.k_rp(n_nodes),
+        )
+        save_run_report(doc, args.run_report)
+        print(f"[caddelag] run report -> {args.run_report}")
+    if args.trace is not None:
+        tracer().save(args.trace)
+        print(f"[caddelag] trace -> {args.trace} "
+              f"({len(tracer().events())} events; open in Perfetto)")
+
+    if bad and args.strict_convergence:
+        raise SystemExit(2)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,85 @@
+"""Unified observability: span tracing, metrics registry, structured reports.
+
+Three parts (see the module docstrings for depth):
+
+* :mod:`repro.obs.trace` -- thread-aware span tracer, Chrome trace-event
+  export, disabled-by-default no-op fast path, cross-thread begin/end.
+* :mod:`repro.obs.metrics` -- process-wide counters/gauges/series registry
+  with atomic snapshot/delta/reset; backs the ``stream_stats()`` and
+  ``program_cache_stats()`` facades in :mod:`repro.core.tiles`.
+* :mod:`repro.obs.report` -- versioned RunReport JSON (+ validators) emitted
+  by ``caddelag-run --run-report``.
+
+:func:`phase` is the glue the five pipeline layers use: one call opens a
+trace span (when tracing is on) AND accumulates the always-on
+``phase.<name>.seconds`` / ``phase.<name>.calls`` registry counters the
+per-transition breakdowns are cut from.
+"""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+from repro.obs import metrics, trace
+from repro.obs.metrics import (
+    REGISTRY,
+    MetricsRegistry,
+    MetricsSnapshot,
+    registry,
+    scoped,
+)
+from repro.obs.trace import (
+    Tracer,
+    begin,
+    disable_tracing,
+    enable_tracing,
+    end,
+    span,
+    tracer,
+    tracing_enabled,
+)
+
+__all__ = [
+    "metrics",
+    "trace",
+    "MetricsRegistry",
+    "MetricsSnapshot",
+    "REGISTRY",
+    "registry",
+    "scoped",
+    "Tracer",
+    "tracer",
+    "enable_tracing",
+    "disable_tracing",
+    "tracing_enabled",
+    "span",
+    "begin",
+    "end",
+    "phase",
+]
+
+
+@contextmanager
+def phase(name: str, **args):
+    """Time one pipeline phase: a trace span + always-on registry counters.
+
+    The yielded span supports ``fence(x)`` -- with tracing enabled under
+    ``enable_tracing(fence=True)``, span exit blocks on ``x`` so both the
+    span and the ``phase.<name>.seconds`` counter record an honest device
+    wall (the counter is accumulated *after* the span exits, fence included).
+    With tracing disabled the span is the shared null span and the counters
+    measure dispatch + host work only; program-level walls remain honest via
+    the block_until_ready at scoring boundaries.
+    """
+    t0 = time.perf_counter()
+    sp = trace.span(f"phase.{name}", **args)
+    sp.__enter__()
+    try:
+        yield sp
+    finally:
+        sp.__exit__(None, None, None)
+        dt = time.perf_counter() - t0
+        REGISTRY.add_named(
+            {f"phase.{name}.seconds": dt, f"phase.{name}.calls": 1.0}
+        )

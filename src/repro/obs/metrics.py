@@ -1,0 +1,228 @@
+"""Process-wide metrics registry: counters, gauges, series, atomic snapshots.
+
+Telemetry used to be scattered across process-global dataclasses
+(``StreamStats``, ``ProgramCacheStats``), per-call report objects and ad-hoc
+print lines -- each with its own (or no) locking and its own reset semantics.
+This registry owns the storage once:
+
+* **counters** are monotonically increasing floats, mutated only through
+  :meth:`MetricsRegistry.add` / :meth:`inc` under the registry lock -- a
+  producer thread ``add``-ing bytes while the main thread resets or snapshots
+  can never lose an update or observe a torn read (the ``reset_stream_stats``
+  race the old ``st.bytes_read += n`` read-modify-writes allowed);
+* **gauges** hold "current value" semantics, with :meth:`max_gauge` for
+  high-water marks (peak live bytes);
+* **series** are bounded append-only float lists (per-iteration solver
+  residuals) -- once a series hits its cap, further appends are dropped and
+  the drop is counted, never silently resized;
+* **snapshots** (:meth:`snapshot`) copy the whole registry atomically, and
+  :meth:`delta` yields exactly the counter increments (and series suffixes)
+  recorded since a snapshot -- the scoped-measurement primitive every
+  per-transition / per-solve breakdown is built on.
+
+Names are dot-scoped by convention (``stream.bytes_read``,
+``phase.solve.seconds``, ``pipeline.consumer_wait_seconds``,
+``program_cache.hits``, ``solver.residuals``); :meth:`reset` takes a prefix
+so one subsystem's counters can be zeroed without touching the rest.
+
+The module-level :data:`REGISTRY` is the process default.  Facades over it
+(``repro.core.tiles.StreamStats``) may also be constructed over a private
+registry for isolated accounting in tests.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Iterable, Mapping
+
+DEFAULT_SERIES_CAP = 4096
+
+
+@dataclass(frozen=True)
+class MetricsSnapshot:
+    """Immutable, internally consistent copy of a registry at one instant."""
+
+    counters: Mapping[str, float]
+    gauges: Mapping[str, float]
+    series_len: Mapping[str, int]
+
+    def counter(self, name: str, default: float = 0.0) -> float:
+        return self.counters.get(name, default)
+
+
+class MetricsRegistry:
+    """Thread-safe counters / gauges / series with atomic snapshot + reset."""
+
+    def __init__(self, series_cap: int = DEFAULT_SERIES_CAP):
+        self._lock = threading.RLock()
+        self._counters: dict[str, float] = {}
+        self._gauges: dict[str, float] = {}
+        self._series: dict[str, list[float]] = {}
+        self._series_dropped: dict[str, int] = {}
+        self._series_cap = int(series_cap)
+
+    # -- counters ------------------------------------------------------------
+
+    def inc(self, name: str, value: float = 1.0) -> None:
+        """Atomically increment one counter."""
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0.0) + value
+
+    def add(self, **counters: float) -> None:
+        """Atomically increment several counters in one critical section.
+
+        Multi-counter updates that must stay mutually consistent (a panel's
+        ``bytes_read`` + ``bytes_decoded``) go through one ``add`` so a
+        concurrent snapshot or reset sees either both or neither.
+        """
+        with self._lock:
+            for name, value in counters.items():
+                self._counters[name] = self._counters.get(name, 0.0) + value
+
+    def add_named(self, counters: Mapping[str, float]) -> None:
+        """``add`` for names that are not valid Python identifiers."""
+        with self._lock:
+            for name, value in counters.items():
+                self._counters[name] = self._counters.get(name, 0.0) + value
+
+    def value(self, name: str, default: float = 0.0) -> float:
+        with self._lock:
+            return self._counters.get(name, default)
+
+    # -- gauges --------------------------------------------------------------
+
+    def set_gauge(self, name: str, value: float) -> None:
+        with self._lock:
+            self._gauges[name] = value
+
+    def max_gauge(self, name: str, value: float) -> None:
+        """High-water-mark gauge: keep the maximum ever set."""
+        with self._lock:
+            cur = self._gauges.get(name)
+            if cur is None or value > cur:
+                self._gauges[name] = value
+
+    def gauge(self, name: str, default: float = 0.0) -> float:
+        with self._lock:
+            return self._gauges.get(name, default)
+
+    # -- series --------------------------------------------------------------
+
+    def append(self, name: str, value: float) -> None:
+        """Append to a bounded series; overflow is counted, not resized."""
+        with self._lock:
+            s = self._series.setdefault(name, [])
+            if len(s) < self._series_cap:
+                s.append(float(value))
+            else:
+                self._series_dropped[name] = self._series_dropped.get(name, 0) + 1
+
+    def extend(self, name: str, values: Iterable[float]) -> None:
+        with self._lock:
+            for v in values:
+                s = self._series.setdefault(name, [])
+                if len(s) < self._series_cap:
+                    s.append(float(v))
+                else:
+                    self._series_dropped[name] = (
+                        self._series_dropped.get(name, 0) + 1
+                    )
+
+    def series(self, name: str) -> tuple[float, ...]:
+        with self._lock:
+            return tuple(self._series.get(name, ()))
+
+    # -- snapshot / delta / reset --------------------------------------------
+
+    def snapshot(self) -> MetricsSnapshot:
+        """Atomic copy: counters, gauges and series lengths, all at once."""
+        with self._lock:
+            return MetricsSnapshot(
+                counters=dict(self._counters),
+                gauges=dict(self._gauges),
+                series_len={k: len(v) for k, v in self._series.items()},
+            )
+
+    def delta(self, since: MetricsSnapshot) -> dict[str, float]:
+        """Exact counter increments since ``since`` (zero deltas omitted)."""
+        with self._lock:
+            out = {}
+            for name, cur in self._counters.items():
+                d = cur - since.counters.get(name, 0.0)
+                if d:
+                    out[name] = d
+            return out
+
+    def series_delta(self, name: str, since: MetricsSnapshot) -> tuple[float, ...]:
+        """Series entries appended since ``since``."""
+        with self._lock:
+            return tuple(self._series.get(name, [])[since.series_len.get(name, 0):])
+
+    def reset(self, prefix: str | None = None) -> None:
+        """Zero counters/gauges and drop series, atomically.
+
+        With ``prefix``, only names starting with it are cleared -- the
+        subsystem-scoped reset behind ``reset_stream_stats()`` /
+        ``reset_program_cache_stats()``.  Entries are *removed* (not set to
+        zero), so a snapshot after a reset is indistinguishable from a fresh
+        registry for that prefix.
+        """
+        with self._lock:
+            if prefix is None:
+                self._counters.clear()
+                self._gauges.clear()
+                self._series.clear()
+                self._series_dropped.clear()
+                return
+            for store in (self._counters, self._gauges, self._series,
+                          self._series_dropped):
+                for name in [k for k in store if k.startswith(prefix)]:
+                    del store[name]
+
+    def names(self) -> tuple[str, ...]:
+        with self._lock:
+            return tuple(
+                sorted(set(self._counters) | set(self._gauges) | set(self._series))
+            )
+
+
+@dataclass
+class Scope:
+    """Scoped measurement: snapshot on entry, exact deltas on demand.
+
+        with metrics.scoped() as sc:
+            ... work ...
+        phase_seconds = sc.delta().get("phase.solve.seconds", 0.0)
+    """
+
+    registry: MetricsRegistry
+    start: MetricsSnapshot | None = field(default=None)
+
+    def __enter__(self) -> "Scope":
+        self.start = self.registry.snapshot()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        return None
+
+    def delta(self) -> dict[str, float]:
+        assert self.start is not None, "Scope used outside its with-block"
+        return self.registry.delta(self.start)
+
+    def series_delta(self, name: str) -> tuple[float, ...]:
+        assert self.start is not None, "Scope used outside its with-block"
+        return self.registry.series_delta(name, self.start)
+
+
+REGISTRY = MetricsRegistry()
+
+
+def registry() -> MetricsRegistry:
+    """The process-default registry."""
+    return REGISTRY
+
+
+def scoped(reg: MetricsRegistry | None = None) -> Scope:
+    """A :class:`Scope` over ``reg`` (default: the process registry)."""
+    return Scope(reg or REGISTRY)

@@ -1,0 +1,65 @@
+"""Streamed-solve roofline model (importable home; benches re-export).
+
+The out-of-core solve is bound by whichever of scratch-disk read, host->device
+staging, or MXU FLOPs saturates first.  All three terms come from measured
+traffic (the ``stream.*`` byte counters) plus the iteration count, so run
+reports and benchmarks can state measured-vs-bound directly.  Lived in
+``benchmarks/roofline.py`` through PR 6; moved here so ``obs/report.py`` can
+attribute a roofline fraction per run without importing the benchmarks tree.
+"""
+
+from __future__ import annotations
+
+PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e-class)
+DISK_BW = 2.0e9  # bytes/s sustained scratch-store read (NVMe-class)
+H2D_BW = 32e9  # bytes/s host->device staging (PCIe gen4 x16-class)
+
+__all__ = [
+    "PEAK_FLOPS",
+    "DISK_BW",
+    "H2D_BW",
+    "streamed_solve_flops",
+    "streamed_solve_roofline",
+]
+
+
+def streamed_solve_flops(n: int, k: int, iterations: int) -> float:
+    """Dense FLOPs of a streamed solve: one (n x n) @ (n x k) mat-vec per
+    iteration plus the chi build (P1 @ b), 2nk per MAC row."""
+    return 2.0 * n * n * k * (iterations + 1)
+
+
+def streamed_solve_roofline(
+    *,
+    bytes_read: float,
+    bytes_h2d: float,
+    flops: float,
+    seconds: float,
+    disk_bw: float = DISK_BW,
+    h2d_bw: float = H2D_BW,
+    peak_flops: float = PEAK_FLOPS,
+) -> dict:
+    """Three-term bound for a streamed solve, from measured traffic.
+
+    ``bound_s = max(read/disk_bw, h2d/h2d_bw, flops/peak)`` is the fastest
+    the solve could have gone on the modeled hardware; ``roofline_frac =
+    bound_s / seconds`` is the fraction of that bound actually achieved
+    (CPU-interpret runs will sit far below 1 -- the *trajectory* of the
+    fraction and of the byte terms across PRs is the signal, the absolute
+    value only means something on real accelerator + NVMe tiers).
+    """
+    t_disk = bytes_read / disk_bw
+    t_h2d = bytes_h2d / h2d_bw
+    t_flop = flops / peak_flops
+    bound_s, bound = max(
+        (t_disk, "disk"), (t_h2d, "h2d"), (t_flop, "compute")
+    )
+    return {
+        "t_disk_s": t_disk,
+        "t_h2d_s": t_h2d,
+        "t_compute_s": t_flop,
+        "bound": bound,
+        "bound_s": bound_s,
+        "measured_s": seconds,
+        "roofline_frac": bound_s / seconds if seconds > 0 else 0.0,
+    }

@@ -21,7 +21,16 @@ its own ``device_put`` loop.  :class:`PanelPipeline` owns the pattern once:
 * **stats integration**: panels, H2D bytes and peak live device bytes are
   accounted exactly as the old double buffer did, plus the pre-/post-codec
   ``bytes_read`` / ``bytes_decoded`` pair, so ``stream_stats()`` tracks real
-  backing-tier traffic;
+  backing-tier traffic.  All counter mutation goes through the stats
+  object's atomic ``add`` (registry-backed, see
+  :mod:`repro.obs.metrics`), so concurrent producers and a mid-run
+  ``reset_stream_stats()`` can no longer lose updates;
+* **observability**: the producer accumulates ``pipeline.producer_fetch_seconds``
+  and the consumer ``pipeline.consumer_wait_seconds`` in the process metrics
+  registry (their ratio is the prefetch-efficiency signal that says whether
+  ``depth`` is right), and with tracing enabled each fetched panel carries a
+  cross-thread span -- opened on the prefetch thread when the fetch starts,
+  closed when the consumer pops it, rendered on the producer's track;
 * **encoded shipping** (``encoded=True``, the stream-GEMM kernel path):
   panels of device-decodable codecs travel in their *stored* form -- bf16
   tiles as raw uint16 bit patterns, half the decoded bytes over H2D, widened
@@ -48,17 +57,16 @@ bitwise identical and report zero ``bytes_read``.
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque
 from typing import Iterator, Sequence
 
 import numpy as np
 
-DEFAULT_PREFETCH_DEPTH = 2
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import REGISTRY as _OBS_REGISTRY
 
-# Several pipelines may feed one consumer (the oochain GEMM runs a left and a
-# right pipeline at once), and their producer threads share one StreamStats --
-# guard the read/decode counters so concurrent `+=` can't drop updates.
-_STATS_LOCK = threading.Lock()
+DEFAULT_PREFETCH_DEPTH = 2
 
 
 def _is_handle(x) -> bool:
@@ -220,11 +228,16 @@ class PanelPipeline:
     def _produce(self) -> None:
         try:
             for row0 in self.origins:
-                for src, ring in zip(self.sources, self._rings):
+                for i, (src, ring) in enumerate(zip(self.sources, self._rings)):
                     if ring is None:
                         continue
                     if self._cancel.is_set():
                         return
+                    # Cross-thread span: opened here (producer tid), closed by
+                    # the consumer when it pops the panel -- the trace shows
+                    # each panel's fetch-to-consumption lifetime on this track.
+                    sp = obs_trace.begin("prefetch.panel", row0=row0, operand=i)
+                    t_f0 = time.perf_counter()
                     if self.encoded:
                         panel, stored, decoded = fetch_panel_encoded_info(
                             src, row0, self.height
@@ -232,16 +245,23 @@ class PanelPipeline:
                     else:
                         panel, stored = fetch_panel_info(src, row0, self.height)
                         decoded = panel.nbytes
+                    _OBS_REGISTRY.add_named(
+                        {
+                            "pipeline.producer_fetch_seconds": (
+                                time.perf_counter() - t_f0
+                            ),
+                            "pipeline.panels_fetched": 1.0,
+                        }
+                    )
                     if self.stats is not None and stored:
                         # stored == 0 means a host-RAM replay (CachingHandle
                         # hit): no backing-tier read, no decode performed.
-                        with _STATS_LOCK:
-                            self.stats.bytes_read += stored
-                            # Encoded panels skip the host decode entirely:
-                            # the prefetch thread produced the stored form,
-                            # which is exactly panel.nbytes either way.
-                            self.stats.bytes_decoded += panel.nbytes
-                    if not ring.put((panel, decoded)):
+                        # Encoded panels skip the host decode entirely: the
+                        # prefetch thread produced the stored form, which is
+                        # exactly panel.nbytes either way.
+                        self.stats.add(bytes_read=stored, bytes_decoded=panel.nbytes)
+                    if not ring.put((panel, decoded, sp)):
+                        obs_trace.end(sp, cancelled=True)
                         return  # closed under us: cancelled
         except BaseException as e:  # propagate to the consumer, then stop
             self._error = e
@@ -261,14 +281,22 @@ class PanelPipeline:
                 bundle.append(src[row0 : row0 + self.height])
                 decs.append(None)
                 continue
+            t_w0 = time.perf_counter()
             item = ring.get()
+            _OBS_REGISTRY.add_named(
+                {
+                    "pipeline.consumer_wait_seconds": time.perf_counter() - t_w0,
+                    "pipeline.consumer_waits": 1.0,
+                }
+            )
             if item is None:
                 if self._error is not None:
                     raise RuntimeError(
                         f"panel prefetch failed at row {row0}"
                     ) from self._error
                 raise RuntimeError("panel pipeline closed while panels were pending")
-            panel, decoded = item
+            panel, decoded, sp = item
+            obs_trace.end(sp)  # closes the producer-side prefetch.panel span
             bundle.append(panel)
             decs.append(decoded)
         return bundle, decs
@@ -317,12 +345,12 @@ class PanelPipeline:
                 dev = put(self._pin_host(panel), self.sharding)
                 nbytes += dev.nbytes
                 if self.stats is not None:
-                    self.stats.panels += 1
-                    self.stats.bytes_h2d += dev.nbytes
+                    inc = {"panels": 1, "bytes_h2d": dev.nbytes}
                     if decoded is not None and decoded > dev.nbytes:
                         # Encoded shipping: the gap between what a host-
                         # decoded transfer would have cost and what crossed.
-                        self.stats.bytes_h2d_saved += decoded - dev.nbytes
+                        inc["bytes_h2d_saved"] = decoded - dev.nbytes
+                    self.stats.add(**inc)
                 staged.append(dev)
             else:
                 staged.append(panel)  # already device-resident; sliced lazily
