@@ -1,6 +1,7 @@
-"""Sequence-engine amortization: per-transition wall-clock with vs. without
-chain-operator reuse.
+"""Sequence-engine benchmarks: amortization, warm-start acceptance, and the
+weekly perf-trajectory artifact.
 
+``run`` -- per-transition wall-clock with vs. without chain-operator reuse.
 A T-snapshot sequence scored pairwise with ``detect_anomalies`` builds
 2(T-1) chain operators (each O(n^3)-GEMM); the ``SequenceDetector`` builds T
 and carries each snapshot's embedding into the next transition, so the total
@@ -10,21 +11,42 @@ work: edge projection, Richardson solve, fused scoring).
 Both passes run after an untimed warm-up transition (shared XLA compile
 cache), over pre-built snapshots, and are charged end-to-end -- the engine
 total includes snapshot 0's embedding, the naive total every rebuild.
+
+``warmstart`` -- the ISSUE 8 acceptance bar: on a slowly-drifting sequence,
+warm-started tolerance-targeted solves (richardson, chebyshev, cg) take
+>= 2x fewer iterations than cold from transition 2 onward, with scores
+allclose (rtol 1e-4, atol 1e-4 of the commute-distance scale).  Asserted,
+not just reported.
+
+``trajectory`` -- the canonical ``BENCH_sequence.json`` artifact: the
+warmstart grid under a stable schema (per-method cold/warm iteration
+trajectories, ratios, score deviation), directly diffable week over week.
+
+  PYTHONPATH=src python benchmarks/bench_sequence.py --warmstart
+  PYTHONPATH=src python benchmarks/bench_sequence.py \
+      --trajectory BENCH_sequence.json
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
+from dataclasses import replace
+from pathlib import Path
 
 import jax
+import numpy as np
 
 from repro.core import (
     CommuteConfig,
     SequenceDetector,
     chain_build_count,
     detect_anomalies,
+    detect_sequence_anomalies,
     trivial_context,
 )
+from repro.core.embedding import commute_time_embedding
 from repro.graphs import gmm_snapshot_sequence
 
 
@@ -69,5 +91,117 @@ def run(n=256, t_steps=4, out=print):
     return naive_total, seq_total
 
 
+WARM_METHODS = ("richardson", "chebyshev", "cg")
+
+
+def warmstart(n=96, t_steps=4, tol=1e-5, noise=1e-4, seed=5, out=print):
+    """Warm-start acceptance grid: cold vs warm per-transition iterations.
+
+    The sequence drifts slowly (tiny ``noise``, no injections) -- the regime
+    warm starting targets: the previous snapshot's solution lands within
+    ~|dA| of the new one, so a tolerance-targeted solve finishes in a few
+    steps where the cold solve pays the full contraction-rate bill.  The
+    score comparison is anchored to the commute-distance scale
+    ``V_G * E||z_i||^2`` (the unit scores are measured in): on a quiet
+    sequence the scores themselves sit orders of magnitude below it.
+    """
+    ctx = trivial_context()
+    base = CommuteConfig(
+        eps_rp=1e-2, d=3, q=8, schedule="xla", k_override=6, solver_tol=tol
+    )
+
+    def snaps():
+        return gmm_snapshot_sequence(
+            ctx, n, t_steps, seed=seed, noise=noise, inject_steps=set()
+        ).snapshots()
+
+    emb = commute_time_embedding(ctx, next(snaps()), replace(base, solver="cg"))
+    z = np.asarray(emb.z, np.float64)
+    scale = float(emb.vol) * float((z * z).sum(1).mean())
+
+    out(f"[bench_sequence] warmstart n={n} t_steps={t_steps} tol={tol:.0e} "
+        f"noise={noise:.0e} commute_scale={scale:.3e}")
+    out("[bench_sequence]  method     | cold its        warm its        | "
+        "ratio(t>=2) | max|dscore|/scale")
+    methods, all_pass = {}, True
+    for method in WARM_METHODS:
+        cold_cfg = replace(base, solver=method)
+        warm_cfg = replace(cold_cfg, warm_start=True)
+        cold = detect_sequence_anomalies(ctx, snaps(), cold_cfg, top_k=10)
+        warm = detect_sequence_anomalies(ctx, snaps(), warm_cfg, top_k=10)
+        cold_its = [r.solve_reports[1].iterations for r in cold.transitions]
+        warm_its = [r.solve_reports[1].iterations for r in warm.transitions]
+        dev = max(
+            float(np.max(np.abs(np.asarray(w.scores) - np.asarray(c.scores))))
+            for c, w in zip(cold.transitions, warm.transitions)
+        ) / scale
+        # "from transition 2 onward" (1-based): indices 1..T-2
+        ratios = [c / max(w, 1) for c, w in zip(cold_its[1:], warm_its[1:])]
+        converged = all(
+            r.solve_reports[1].converged
+            for res in (cold, warm) for r in res.transitions
+        )
+        ok = converged and dev <= 1e-4 and all(r >= 2.0 for r in ratios)
+        all_pass = all_pass and ok
+        methods[method] = {
+            "cold_iterations": cold_its, "warm_iterations": warm_its,
+            "ratios_from_transition_2": ratios,
+            "cold_seconds": cold.transition_seconds,
+            "warm_seconds": warm.transition_seconds,
+            "score_dev_over_scale": dev, "converged": converged, "pass": ok,
+        }
+        out(f"[bench_sequence]  {method:10s} | {str(cold_its):15s} "
+            f"{str(warm_its):15s} | {min(ratios):9.1f}x | {dev:.2e} "
+            f"-> {'PASS' if ok else 'FAIL'}")
+        assert converged, f"{method}: a sequence solve did not converge"
+        assert dev <= 1e-4, (
+            f"{method}: warm scores deviate {dev:.2e} x commute scale"
+        )
+        assert all(r >= 2.0 for r in ratios), (
+            f"{method}: warm start saved < 2x iterations: "
+            f"cold={cold_its} warm={warm_its}"
+        )
+    return {
+        "config": {"n": n, "t_steps": t_steps, "tol": tol, "noise": noise,
+                   "seed": seed, "d": 3, "k_rp": 6},
+        "commute_scale": scale, "methods": methods, "all_pass": all_pass,
+    }
+
+
+def trajectory(out_path, out=print):
+    """Canonical perf-trajectory artifact (``BENCH_sequence.json``).
+
+    The warmstart grid under a stable schema: per-method cold/warm iteration
+    trajectories, the >= 2x ratios, per-transition seconds and the score
+    deviation, so warm-start regressions show up in the weekly artifact
+    diff."""
+    res = warmstart(out=out)
+    result = {"bench": "sequence_trajectory", "schema": 1, **res}
+    Path(out_path).write_text(json.dumps(result, indent=2))
+    out(f"[bench_sequence] trajectory: all_pass={res['all_pass']}; "
+        f"wrote {out_path}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--t-steps", type=int, default=4)
+    ap.add_argument("--warmstart", action="store_true",
+                    help="run the warm-start acceptance grid (asserts the "
+                         ">= 2x iteration bar) instead of the amortization "
+                         "bench")
+    ap.add_argument("--trajectory", default=None, metavar="PATH",
+                    help="write the canonical warm-start perf-trajectory "
+                         "artifact (BENCH_sequence.json) and exit")
+    args = ap.parse_args()
+    if args.trajectory:
+        trajectory(args.trajectory)
+    elif args.warmstart:
+        warmstart()
+    else:
+        run(n=args.n, t_steps=args.t_steps)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,5 +1,5 @@
 """Solver methods head-to-head: iterations-to-tolerance and scratch bytes,
-richardson vs chebyshev, resident vs out-of-core, 1x1 vs 2x2 mesh.
+richardson vs chebyshev vs cg, resident vs out-of-core, 1x1 vs 2x2 mesh.
 
 The solve phase is the dominant *recurring* cost of a snapshot sequence once
 the chain is built -- and out-of-core, every solver iteration is a streamed
@@ -53,7 +53,7 @@ import sys
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 from roofline import streamed_solve_flops, streamed_solve_roofline  # noqa: E402
 
-METHODS = ("richardson", "chebyshev")
+METHODS = ("richardson", "chebyshev", "cg")
 
 
 def _contexts(n: int):

@@ -30,6 +30,7 @@ and eager concatenation on those sums replicas on jax 0.4.x (see ROADMAP).
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Iterable
 
@@ -149,10 +150,21 @@ class SequenceDetector:
         if not self.donate:
             return
         for buf in (a, emb.z, *(() if emb.op is None else (emb.op.p1, emb.op.p2))):
+            delete = getattr(buf, "delete", None)
+            if delete is None:
+                continue  # store-backed handle: the user's data, not ours
             try:
-                buf.delete()
-            except Exception:  # already deleted / handle / not deletable
-                pass
+                delete()
+            except (RuntimeError, ValueError, OSError) as exc:
+                # Already-deleted / donated buffers raise here; that is the
+                # expected double-buffering race and safe to continue past --
+                # but say so, instead of silently eating every exception (a
+                # genuinely failing delete used to vanish without a trace).
+                warnings.warn(
+                    f"snapshot buffer delete failed during release: {exc!r}",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
 
     def push(self, a) -> CADResult | None:
         """Consume snapshot t; returns the CADResult for transition (t-1, t).
@@ -161,13 +173,22 @@ class SequenceDetector:
         handle (streamed off-core; scores bitwise-identical to the resident
         run with the default chain build, allclose under ``fuse_l=True``).
         Builds exactly one chain operator (for ``a``); the left endpoint's
-        operator was built when *it* was pushed.
+        operator was built when *it* was pushed.  With
+        ``cfg.warm_start=True``, the previous snapshot's solution seeds the
+        solver (transition 1 onward) -- a tolerance-targeted solve on a
+        slowly-drifting sequence then converges in far fewer iterations.
         """
         t0 = time.perf_counter()
         m0 = _OBS_REGISTRY.snapshot()
         with obs_trace.span("sequence.push", t=self._t) as push_sp:
+            warm_from = (
+                self._prev[1].z
+                if (self.cfg.warm_start and self._prev is not None)
+                else None
+            )
             emb = commute_time_embedding(
-                self.ctx, a, self.cfg, use_kernel=self.use_kernel
+                self.ctx, a, self.cfg, use_kernel=self.use_kernel,
+                warm_from=warm_from,
             )
             out = None
             if self._prev is not None:
@@ -200,9 +221,29 @@ class SequenceDetector:
         return out
 
     def finalize(self) -> SequenceResult:
-        """Package per-transition results and the sequence-wide top-k."""
-        if not self._transitions:
-            raise ValueError("finalize() before any transition was scored")
+        """Package per-transition results and the sequence-wide top-k.
+
+        A single-snapshot sequence (T=1) has zero transitions by definition
+        and finalizes to an empty result; T=0 means the detector never saw a
+        snapshot at all, which is a caller bug and raises.
+        """
+        if self._t == 0:
+            raise ValueError(
+                "finalize() on an empty sequence: 0 snapshots were pushed "
+                "(scoring transitions needs at least 2)"
+            )
+        if not self._transitions:  # T == 1: nothing to score, not an error
+            return SequenceResult(
+                transitions=[],
+                global_top_idx=jnp.zeros((0,), jnp.int32),
+                global_top_val=jnp.zeros((0,), jnp.float32),
+                global_top_step=jnp.zeros((0,), jnp.int32),
+                n_snapshots=self._t,
+                chain_builds=chain.chain_build_count() - self._builds0,
+                transition_seconds=self._seconds,
+                transition_metrics=self._metrics,
+                warmup_metrics=self._warmup_metrics,
+            )
         return SequenceResult(
             transitions=self._transitions,
             global_top_idx=jnp.asarray(self._g_idx),

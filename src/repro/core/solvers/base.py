@@ -25,7 +25,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
-METHODS = ("richardson", "chebyshev")
+METHODS = ("richardson", "chebyshev", "cg")
 
 # Paper default: delta = 1e-4 gives q = ceil(ln 1e4) = 10, matching the
 # CommuteConfig default q.
@@ -98,23 +98,29 @@ class SolveReport:
 
     method: str
     iterations: int  # refinement steps taken (P2 mat-vecs)
-    residual: float
-    converged: bool  # residual <= tolerance (always True for fixed-iteration runs)
+    residual: float  # NaN when the run measured no residual (zero iterations)
+    converged: bool  # residual <= tolerance; always False when no residual was measured
     tolerance: float | None
     max_iters: int  # the resolved step bound the run was given
     streamed: bool  # True when P1/P2 were store-backed (out-of-core solve)
-    rho: float | None = None  # Chebyshev interval bound used (inflated estimate)
+    rho: float | None = None  # Chebyshev interval bound the run started from
     bytes_read: int = 0  # scratch bytes served during the solve
     panels: int = 0  # panels staged during the solve
     bytes_h2d: int = 0  # host-to-device bytes staged during the solve
     residuals: tuple = ()  # per-iteration residual series (stopping metric)
+    # Chebyshev interval after Manteuffel-style adaptation (== rho when the
+    # measured contraction never missed the predicted rate); None for methods
+    # that carry no interval.
+    rho_final: float | None = None
+    warm_start: bool = False  # y0 seeded from a previous solution
 
     def summary(self) -> str:
         """One-line telemetry, e.g. for the CLI's per-transition printout."""
         tol = f" tol={self.tolerance:.1e}" if self.tolerance is not None else ""
         conv = "" if self.converged else " NOT-CONVERGED"
         io = f", {self.bytes_read / 1e6:.1f} MB scratch" if self.streamed else ""
+        warm = " warm" if self.warm_start else ""
         return (
-            f"{self.method}: {self.iterations} its{tol}, "
+            f"{self.method}{warm}: {self.iterations} its{tol}, "
             f"res {self.residual:.1e}{conv}{io}"
         )

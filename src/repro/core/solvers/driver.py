@@ -4,9 +4,10 @@ Every consumer of the chain operator (the commute-time embedding, the legacy
 ``estimate_solution`` shim, benchmarks) solves through :func:`solve`:
 
 * **resident** operators run a single cached ``jax.jit(lax.while_loop)``
-  program per (method, mesh, geometry): the tolerance, the step cap and the
-  Chebyshev interval bound all enter as *operands*, so a steady-state
-  ``SequenceDetector.push`` -- or a tolerance change between solves -- adds
+  program per (method, mesh, geometry): the tolerance, the step cap, the
+  Chebyshev interval bound and the warm-start iterate all enter as
+  *operands*, so a steady-state ``SequenceDetector.push`` -- or a tolerance
+  change between solves, or switching between cold and warm starts -- adds
   zero traces and zero program-cache misses;
 * **streamed** operators (store-backed P1/P2 from an out-of-core chain) run a
   host Python loop -- a traced loop body cannot fetch panels -- reusing the
@@ -17,8 +18,11 @@ Every consumer of the chain operator (the commute-time embedding, the legacy
 Both paths stop on the same metric: the relative preconditioned residual
 ``||Z^(b - L y)||_F / ||Z^ b||_F``, which is free to measure (for Richardson
 it *is* the step just taken) and bounds the true error by ``1/(1 - rho)``.
-Adding a method means adding one iteration rule here (CG and deflated
-restarts drop in the same way); the registry below is the whole surface.
+The denominator is always ``||Z^ b||`` -- in particular it does NOT become
+``||Z^(b - L y0)||`` under a warm start, so a tolerance keeps exactly the
+same meaning whether the solve starts cold (``y0 = chi``) or from a previous
+snapshot's solution.  Adding a method means adding one iteration rule here;
+the registry below is the whole surface.
 
 Methods:
 
@@ -39,7 +43,21 @@ Methods:
   ~``2 r^k`` with ``r = sigma / (1 + sqrt(1 - sigma^2)) < rho``) -- and
   out-of-core, iterations are streamed passes over the P2 scratch, so the
   same factor comes off ``stream_stats().bytes_read``.  With ``rho -> 0`` the
-  recurrence degenerates exactly to Richardson.
+  recurrence degenerates exactly to Richardson.  The interval adapts
+  Manteuffel-style during the solve (see ``_rho_from_rate``): when the
+  measured contraction misses the asymptotic rate the current interval
+  predicts, the bound was an underestimate (power iteration converges to rho
+  from below) -- the interval grows and the recurrence restarts from the
+  current iterate.  This retires the old static ``RHO_GAP_SAFETY`` margin.
+* ``cg`` -- conjugate gradients on the deflated SPD subspace, after Khoa &
+  Chawla's solve-to-epsilon framing (arXiv:1111.4541).  The preconditioned
+  operator is ``P2 = Z^ L = I - D^{-1/2} S~^{2^d} D^{1/2}``, so
+  ``D^{1/2} P2 D^{-1/2} = I - S~^{2^d}`` is symmetric with spectrum in
+  ``[1 - rho, 1]`` on the deflated subspace: CG with *degree-weighted* inner
+  products ``<u, v>_D = u^T D v`` (the operator's ``deg`` vector) is exact
+  CG on that SPD form.  One P2 mat-vec per iteration -- streamed, one pass
+  over the P2 scratch, batched through ``CachingHandle`` and routed through
+  the fused stream-GEMM kernel exactly like the stationary methods.
 """
 
 from __future__ import annotations
@@ -66,21 +84,35 @@ from repro.core.tiles import (
     stream_stats,
 )
 
-# Power iteration converges to rho from below; Chebyshev wants an interval
-# that *contains* the spectrum (a slight overestimate only mildly slows it,
-# an underestimate makes the polynomial grow on the uncovered tail).  The
-# estimate's lag lives in the spectral *gap* -- after k steps the unresolved
-# tail is a fraction of (1 - rho), not of rho -- so the safety margin shrinks
-# the gap by 10% rather than scaling rho (a multiplicative factor on a rho
-# near 1 would blow straight through 1 and degrade the interval to useless).
-RHO_GAP_SAFETY = 1.1
 RHO_MAX = 0.999
+
+# Manteuffel-style interval adaptation (chebyshev).  The Chebyshev
+# pseudo-residual is NOT monotone -- it oscillates with a short period even
+# when the interval is correct -- so the observed contraction is measured as
+# the *geometric mean* since the last (re)start, c = (res/res_anchor)^(1/kr),
+# never step-to-step, and only after RHO_ADAPT_MIN_STEPS steps (enough to
+# span an oscillation cycle).  When that smoothed rate misses the predicted
+# asymptotic rate by more than RHO_ADAPT_SLACK, an eigenvalue of G sticks out
+# of [0, rho]: grow the interval and restart the recurrence from the current
+# iterate.  The growth is the SMALLER of the rate-implied bound (exact
+# inverse of the predicted-rate formula, the right answer for a mild miss)
+# and a gap-halving step (bounds the jump when the iteration has fully
+# stalled and the measured ratio ~1 would otherwise slam the interval
+# straight to RHO_MAX).
+RHO_ADAPT_SLACK = 1.2
+RHO_ADAPT_MIN_STEPS = 4
+# No adaptation once the relative residual approaches the float32 noise
+# floor: a roundoff-dominated stall there reads as c ~ 1 -- indistinguishable
+# from a missed rate -- and growing the interval on it wrecks an
+# already-converged iteration.  Conservative (two decades above f32 eps):
+# a genuine interval underestimate shows up while residuals are still large.
+RHO_ADAPT_RES_FLOOR = 1e-5
 
 # Fixed-size residual-history buffer carried through the resident while_loop
 # (a traced loop cannot append to a Python list).  Comfortably above
 # TOLERANCE_ITER_CAP (300), so in practice the full per-iteration residual
-# series survives; a hypothetical longer run wraps the ring rather than
-# growing the carry.
+# series survives; a longer run wraps the ring -- the driver un-rotates it so
+# SolveReport.residuals is always the chronological tail.
 RES_HIST_CAP = 512
 
 
@@ -103,7 +135,8 @@ def _frob(x: jax.Array) -> jax.Array:
 
 def _cheb_weight(k, p_prev, sigma2):
     """p_{k+1} of the Chebyshev three-term recurrence (k is the 0-based step
-    counter: step 0 uses p_1 = 1, step 1 uses p_2, then the general rule)."""
+    counter since the last restart: step 0 uses p_1 = 1, step 1 uses p_2,
+    then the general rule)."""
     return jnp.where(
         k == 0,
         jnp.float32(1.0),
@@ -115,14 +148,47 @@ def _cheb_weight(k, p_prev, sigma2):
     ).astype(jnp.float32)
 
 
+def _cheb_rate(sigma2):
+    """Predicted asymptotic per-step contraction of the Chebyshev recurrence
+    on [0, rho]: r = sigma / (1 + sqrt(1 - sigma^2))."""
+    return jnp.sqrt(sigma2) / (1.0 + jnp.sqrt(jnp.maximum(1.0 - sigma2, 0.0)))
+
+
+def _rho_from_rate(c):
+    """Invert the rate formula: the interval bound whose predicted asymptotic
+    contraction equals the measured per-step ratio ``c``.  Inverse pair:
+    c = sigma/(1+sqrt(1-sigma^2)) <=> sigma = 2c/(1+c^2), and
+    sigma = rho/(2-rho) <=> rho = 2 sigma/(1+sigma)."""
+    sigma = 2.0 * c / (1.0 + c * c)
+    return 2.0 * sigma / (1.0 + sigma)
+
+
+def _unrotate_hist(hist: np.ndarray, iters: int) -> list[float]:
+    """Chronological residual series from the while_loop's ring buffer.
+
+    The loop writes step k at index ``k mod RES_HIST_CAP``; once
+    ``iters > RES_HIST_CAP`` the buffer has wrapped and the oldest surviving
+    entry sits at ``iters mod RES_HIST_CAP`` -- rotate so the returned series
+    is the last ``RES_HIST_CAP`` residuals in order.
+    """
+    cap = hist.shape[0]
+    if iters <= cap:
+        out = hist[:iters]
+    else:
+        s = iters % cap
+        out = np.concatenate([hist[s:], hist[:s]])
+    return [float(r) for r in out]
+
+
 # ---------------------------------------------------------------------------
 # resident path: one cached while_loop program per (method, ctx, geometry)
 # ---------------------------------------------------------------------------
 
 
 def _resident_program(ctx: DistContext, method: str, deflate: bool, chi):
-    """The jitted adaptive loop.  Stopping operands (tol, max_steps, rho) are
-    traced, so one compiled program serves every tolerance/cap/rho."""
+    """The jitted adaptive loop.  Stopping operands (tol, max_steps, rho) and
+    the warm-start iterate y0 are traced, so one compiled program serves
+    every tolerance/cap/rho and both cold (y0 = chi) and warm starts."""
 
     def build():
         def matvec(p2, y):
@@ -130,53 +196,143 @@ def _resident_program(ctx: DistContext, method: str, deflate: bool, chi):
             out = jnp.dot(p2, y.astype(jnp.float32), preferred_element_type=jnp.float32)
             return ctx.constrain(out.astype(y.dtype), ctx.rowblock_spec)
 
-        def run(p2, chi, tol, max_steps, rho):
+        def metric_deflate(delta):
+            # Measure the residual on the solve's invariant subspace: the
+            # iterate is deflated every step, so a nullspace (constant)
+            # component of chi - P2 y is noise that never decays -- it
+            # must not keep an otherwise-converged solve running.
+            if deflate:
+                delta = delta - jnp.mean(
+                    delta.astype(jnp.float32), axis=0, keepdims=True
+                )
+            return delta
+
+        def run(p2, chi, y0, tol, max_steps, rho):
             den = jnp.maximum(_frob(chi), 1e-30)
-            gamma = 2.0 / (2.0 - rho)
-            sigma2 = (rho / (2.0 - rho)) ** 2
 
             def cond(carry):
-                _, _, k, res, _, _ = carry
+                _, _, k, _, _, _, _, _, res = carry
                 return jnp.logical_and(k < max_steps, res > tol)
 
             def body(carry):
-                y, y_prev, k, _, p_prev, hist = carry
+                y, y_prev, k, kr, res_anchor, p_prev, rho_c, hist, _ = carry
+                gamma = 2.0 / (2.0 - rho_c)
+                sigma2 = (rho_c / (2.0 - rho_c)) ** 2
                 gy = y - matvec(p2, y) + chi  # G y + chi; gy - y is the residual
                 if method == "richardson":
                     y_new, p_new = gy, p_prev
                 else:
-                    p_new = _cheb_weight(k, p_prev, sigma2)
+                    p_new = _cheb_weight(kr, p_prev, sigma2)
                     y_new = p_new * (gamma * gy + (1.0 - gamma) * y) + (1.0 - p_new) * y_prev
                     y_new = ctx.constrain(y_new.astype(chi.dtype), ctx.rowblock_spec)
                 if deflate:
                     y_new = deflate_constant(ctx, y_new)
-                # Measure the residual on the solve's invariant subspace: the
-                # iterate is deflated every step, so a nullspace (constant)
-                # component of chi - P2 y is noise that never decays -- it
-                # must not keep an otherwise-converged solve running.
-                delta = gy - y
-                if deflate:
-                    delta = delta - jnp.mean(
-                        delta.astype(jnp.float32), axis=0, keepdims=True
-                    )
-                res = _frob(delta) / den
+                res = _frob(metric_deflate(gy - y)) / den
                 hist = lax.dynamic_update_index_in_dim(
                     hist, res, jnp.mod(k, RES_HIST_CAP), 0
                 )
-                return (y_new, y, k + jnp.int32(1), res, p_new, hist)
+                # the contraction anchor: the residual at the last (re)start
+                res_anchor = jnp.where(kr == 0, res, res_anchor)
+                kr_new = kr + jnp.int32(1)
+                if method == "chebyshev":
+                    # Manteuffel-style adaptation on the geometric-mean
+                    # contraction since the last restart (the pseudo-residual
+                    # oscillates; per-step ratios false-trigger).
+                    c_avg = jnp.power(
+                        res / jnp.maximum(res_anchor, jnp.float32(1e-30)),
+                        1.0 / jnp.maximum(kr.astype(jnp.float32), 1.0),
+                    )
+                    pred = _cheb_rate(sigma2)
+                    miss = jnp.logical_and(
+                        kr >= RHO_ADAPT_MIN_STEPS,
+                        jnp.logical_and(
+                            c_avg > jnp.minimum(pred * RHO_ADAPT_SLACK, 0.999),
+                            res > jnp.float32(RHO_ADAPT_RES_FLOOR),
+                        ),
+                    )
+                    implied = _rho_from_rate(jnp.minimum(c_avg, 0.9995))
+                    gap_half = 1.0 - 0.5 * (1.0 - rho_c)
+                    rho_new = jnp.minimum(
+                        jnp.minimum(implied, gap_half), jnp.float32(RHO_MAX)
+                    )
+                    grow = jnp.logical_and(miss, rho_new > rho_c)
+                    rho_c = jnp.where(grow, rho_new, rho_c).astype(jnp.float32)
+                    # restart: kr = 0 makes the next step use p_1 = 1, which
+                    # zeroes the y_prev term -- a fresh start from y_new.
+                    kr_new = jnp.where(grow, jnp.int32(0), kr_new)
+                return (
+                    y_new, y, k + jnp.int32(1), kr_new, res_anchor, p_new,
+                    rho_c, hist, res,
+                )
 
             init = (
-                chi, chi, jnp.int32(0), jnp.float32(jnp.inf), jnp.float32(1.0),
+                y0, y0, jnp.int32(0), jnp.int32(0), jnp.float32(jnp.inf),
+                jnp.float32(1.0), rho,
+                jnp.zeros((RES_HIST_CAP,), jnp.float32), jnp.float32(jnp.inf),
+            )
+            y, _, k, _, _, _, rho_c, hist, res = lax.while_loop(cond, body, init)
+            return y, k, res, hist, rho_c
+
+        def run_cg(p2, chi, y0, w, tol, max_steps):
+            den = jnp.maximum(_frob(chi), 1e-30)
+            wcol = jnp.maximum(w.astype(jnp.float32), 0.0).reshape(-1, 1)
+            wsum = jnp.maximum(jnp.sum(wcol), 1e-30)
+
+            def wdot(u, v):
+                return jnp.sum(wcol * u * v, axis=0, keepdims=True)
+
+            def dproj(x):
+                # project onto range(P2) = {u : 1^T D u = 0}: remove the
+                # deg-weighted mean (the D-geometry's nullspace direction)
+                return x - jnp.sum(wcol * x, axis=0, keepdims=True) / wsum
+
+            r0 = chi.astype(jnp.float32) - matvec(
+                p2, y0.astype(jnp.float32)
+            ).astype(jnp.float32)
+            if deflate:
+                r0 = dproj(r0)
+            r0 = ctx.constrain(r0, ctx.rowblock_spec)
+
+            def cond(carry):
+                _, _, _, _, k, res, _ = carry
+                return jnp.logical_and(k < max_steps, res > tol)
+
+            def body(carry):
+                y, r, p, rz, k, _, hist = carry
+                q = matvec(p2, p)
+                if deflate:
+                    q = ctx.constrain(dproj(q), ctx.rowblock_spec)
+                pq = wdot(p, q)
+                alpha = jnp.where(pq > 0, rz / jnp.maximum(pq, 1e-30), 0.0)
+                y_new = (y.astype(jnp.float32) + alpha * p).astype(chi.dtype)
+                if deflate:
+                    y_new = deflate_constant(ctx, y_new)
+                y_new = ctx.constrain(y_new, ctx.rowblock_spec)
+                r_new = r - alpha * q
+                if deflate:
+                    r_new = dproj(r_new)
+                r_new = ctx.constrain(r_new, ctx.rowblock_spec)
+                rz_new = wdot(r_new, r_new)
+                beta = jnp.where(rz > 0, rz_new / jnp.maximum(rz, 1e-30), 0.0)
+                p_new = ctx.constrain(r_new + beta * p, ctx.rowblock_spec)
+                res = _frob(metric_deflate(r_new)) / den
+                hist = lax.dynamic_update_index_in_dim(
+                    hist, res, jnp.mod(k, RES_HIST_CAP), 0
+                )
+                return (y_new, r_new, p_new, rz_new, k + jnp.int32(1), res, hist)
+
+            init = (
+                y0, r0, r0, wdot(r0, r0), jnp.int32(0), jnp.float32(jnp.inf),
                 jnp.zeros((RES_HIST_CAP,), jnp.float32),
             )
-            y, _, k, res, _, hist = lax.while_loop(cond, body, init)
+            y, _, _, _, k, res, hist = lax.while_loop(cond, body, init)
             return y, k, res, hist
 
-        return jax.jit(run)
+        return jax.jit(run_cg if method == "cg" else run)
 
     key = (
         "solve_driver", method, ctx, deflate, tuple(chi.shape),
-        np.dtype(chi.dtype).name,
+        np.dtype(chi.dtype).name, RES_HIST_CAP,
     )
     return cached_program(key, build)
 
@@ -200,7 +356,8 @@ def _kernel_panel_program(ctx, ph: int, n: int, k: int, panel_dtype: str,
     ``gy = chi + y - P2 y`` + deflated-residual moments, single kernel pass
     where the mesh has one column shard, kernel mat-vec + psum + jnp
     epilogue otherwise.  ``fused=False`` is the plain mat-vec (the chi
-    build).  The row origin is traced, so one program serves every panel.
+    build and the CG direction product).  The row origin is traced, so one
+    program serves every panel.
     """
 
     def build():
@@ -263,9 +420,10 @@ def _kernel_stream_pass(ctx, handle, y, chi, *, depth, fused):
     solve iteration -- ``gy = chi + y - P2 y`` row-sharded plus the residual
     moments of ``delta = chi - P2 y`` reduced over all n rows -- so the
     iteration costs exactly this one pass over the stream.  ``fused=False``
-    returns the plain mat-vec (the chi build).  Per-panel outputs are
-    host-concatenated (eager concatenate on partially-replicated shards is
-    unsafe on jax 0.4.x) and re-put with the solver's rowblock sharding.
+    returns the plain mat-vec (the chi build / CG direction product).
+    Per-panel outputs are host-concatenated (eager concatenate on
+    partially-replicated shards is unsafe on jax 0.4.x) and re-put with the
+    solver's rowblock sharding.
     """
     from repro.store import PanelPipeline  # deferred: optional path
 
@@ -311,8 +469,8 @@ def _kernel_stream_pass(ctx, handle, y, chi, *, depth, fused):
 
 
 def _solve_streamed(
-    ctx, p2_handle, chi, method, deflate, tol, max_steps, rho,
-    solver_batch, prefetch_depth, use_kernel=False,
+    ctx, p2_handle, chi, y0, method, deflate, tol, max_steps, rho,
+    solver_batch, prefetch_depth, use_kernel=False, w=None,
 ):
     p2, cached = p2_handle, None
     if solver_batch > 1 and is_streamable(p2_handle):
@@ -320,20 +478,88 @@ def _solve_streamed(
 
         p2 = cached = CachingHandle(p2_handle)
     den = max(float(_frob(chi)), 1e-30)
-    gamma = 2.0 / (2.0 - rho)
-    sigma2 = (rho / (2.0 - rho)) ** 2
     n_rows = int(chi.shape[0])
+    passes = 0
 
-    y, y_prev, p_prev = chi, chi, 1.0
-    k, res = 0, math.inf
-    res_hist: list[float] = []
-    while k < max_steps and res > tol:
-        if cached is not None and k and k % solver_batch == 0:
+    def stream_matvec(x):
+        """One plain P2 @ x pass over the stream (kernel path when enabled)."""
+        nonlocal passes
+        if cached is not None and passes and passes % solver_batch == 0:
             cached.refresh()  # batch boundary: next pass re-streams the store
+        passes += 1
+        if use_kernel:
+            mv = _kernel_stream_pass(ctx, p2, x, None, depth=prefetch_depth,
+                                     fused=False)
+            return ctx.constrain(mv.astype(jnp.float32), ctx.rowblock_spec)
+        return matmul_rowblock(
+            ctx, p2, x, prefetch_depth=prefetch_depth
+        ).astype(jnp.float32)
+
+    def metric(delta):
+        if deflate:
+            delta = delta - jnp.mean(
+                delta.astype(jnp.float32), axis=0, keepdims=True
+            )
+        return float(_frob(delta)) / den
+
+    res_hist: list[float] = []
+
+    if method == "cg":
+        wcol = jnp.maximum(
+            jnp.asarray(w, jnp.float32).reshape(-1, 1), 0.0
+        )
+        wsum = max(float(jnp.sum(wcol)), 1e-30)
+
+        def wdot(u, v):
+            return jnp.sum(wcol * u * v, axis=0, keepdims=True)
+
+        def dproj(x):
+            m = jnp.sum(wcol * x, axis=0, keepdims=True) / wsum
+            return ctx.constrain(x - m, ctx.rowblock_spec)
+
+        y = y0
+        r = chi.astype(jnp.float32) - stream_matvec(y0.astype(jnp.float32))
+        if deflate:
+            r = dproj(r)
+        p_dir = r
+        rz = wdot(r, r)
+        k, res = 0, math.inf
+        while k < max_steps and res > tol:
+            q = stream_matvec(p_dir)
+            if deflate:
+                q = dproj(q)
+            pq = wdot(p_dir, q)
+            alpha = jnp.where(pq > 0, rz / jnp.maximum(pq, 1e-30), 0.0)
+            y = (y.astype(jnp.float32) + alpha * p_dir).astype(chi.dtype)
+            if deflate:
+                y = deflate_constant(ctx, y)
+            y = ctx.constrain(y, ctx.rowblock_spec)
+            r = r - alpha * q
+            if deflate:
+                r = dproj(r)
+            rz_new = wdot(r, r)
+            beta = jnp.where(rz > 0, rz_new / jnp.maximum(rz, 1e-30), 0.0)
+            p_dir = ctx.constrain(r + beta * p_dir, ctx.rowblock_spec)
+            rz = rz_new
+            res = metric(r)
+            k += 1
+            res_hist.append(float(res))
+        return y, k, res, res_hist, None
+
+    rho_c = float(rho)
+    gamma = 2.0 / (2.0 - rho_c)
+    sigma2 = (rho_c / (2.0 - rho_c)) ** 2
+
+    y, y_prev, p_prev = y0, y0, 1.0
+    k, kr, res, res_anchor = 0, 0, math.inf, math.inf
+    while k < max_steps and res > tol:
         if use_kernel:
             # One fused pass over the P2 stream: gy AND the residual moments
             # of delta = chi - P2 y come out of the same kernel traversal, so
             # each iteration reads the scratch exactly once.
+            if cached is not None and passes and passes % solver_batch == 0:
+                cached.refresh()
+            passes += 1
             gy, cs, ss = _kernel_stream_pass(
                 ctx, p2, y, chi, depth=prefetch_depth, fused=True
             )
@@ -341,28 +567,43 @@ def _solve_streamed(
             num2 = ss - float(np.sum(cs * cs)) / n_rows if deflate else ss
             res = math.sqrt(max(num2, 0.0)) / den
         else:
-            gy = y - matmul_rowblock(ctx, p2, y, prefetch_depth=prefetch_depth) + chi
+            gy = y - stream_matvec(y).astype(chi.dtype) + chi
         if method == "richardson":
             y_new = gy
         else:
             # same weight rule as the traced path; host scalars here
-            p_new = float(_cheb_weight(k, p_prev, sigma2))
+            p_new = float(_cheb_weight(kr, p_prev, sigma2))
             y_new = p_new * (gamma * gy + (1.0 - gamma) * y) + (1.0 - p_new) * y_prev
             y_new = ctx.constrain(y_new.astype(chi.dtype), ctx.rowblock_spec)
             p_prev = p_new
         if deflate:
             y_new = deflate_constant(ctx, y_new)
         if not use_kernel:
-            delta = gy - y  # residual, minus its never-decaying nullspace part
-            if deflate:
-                delta = delta - jnp.mean(
-                    delta.astype(jnp.float32), axis=0, keepdims=True
-                )
-            res = float(_frob(delta)) / den
+            res = metric(gy - y)  # residual, minus its never-decaying nullspace part
+        if kr == 0:
+            res_anchor = res  # contraction anchor: residual at the (re)start
+        kr += 1
+        if (
+            method == "chebyshev"
+            and kr - 1 >= RHO_ADAPT_MIN_STEPS
+            and res > RHO_ADAPT_RES_FLOOR
+        ):
+            # geometric-mean contraction since the restart (see the constants
+            # block: per-step ratios false-trigger on the oscillation)
+            pred = float(_cheb_rate(jnp.float32(sigma2)))
+            c_avg = (res / max(res_anchor, 1e-30)) ** (1.0 / max(kr - 1, 1))
+            if c_avg > min(pred * RHO_ADAPT_SLACK, 0.999):
+                implied = _rho_from_rate(min(c_avg, 0.9995))
+                rho_new = min(implied, 1.0 - 0.5 * (1.0 - rho_c), RHO_MAX)
+                if rho_new > rho_c:
+                    rho_c = rho_new
+                    gamma = 2.0 / (2.0 - rho_c)
+                    sigma2 = (rho_c / (2.0 - rho_c)) ** 2
+                    kr = 0  # restart: next step uses p_1 = 1 from y_new
         y_prev, y = y, y_new
         k += 1
         res_hist.append(float(res))
-    return y, k, res, res_hist
+    return y, k, res, res_hist, rho_c
 
 
 # ---------------------------------------------------------------------------
@@ -381,17 +622,25 @@ def solve(
     solver_batch: int = 1,
     prefetch_depth: int | None = None,
     use_gemm_kernel: bool | None = None,
+    y0: jax.Array | None = None,
 ) -> tuple[jax.Array, SolveReport]:
     """x* ~= L^+ b for each column of the row-sharded (n, k) ``b``.
 
     ``op`` is any chain operator (duck-typed: ``p1``/``p2`` arrays or
-    store-backed handles, optional ``prefetch_depth``/``rho`` metadata).
-    ``fixed_q`` feeds the legacy fixed-iteration default: with no tolerance,
-    cap or delta on the spec, the driver runs exactly ``fixed_q - 1``
-    refinement steps -- bit-compatible with the historical Richardson loop.
-    ``solver_batch``/``prefetch_depth`` are the streamed path's I/O knobs
-    (ignored resident -- nothing streams); see
+    store-backed handles, optional ``prefetch_depth``/``rho``/``deg``
+    metadata).  ``fixed_q`` feeds the legacy fixed-iteration default: with no
+    tolerance, cap or delta on the spec, the driver runs exactly
+    ``fixed_q - 1`` refinement steps -- bit-compatible with the historical
+    Richardson loop.  ``solver_batch``/``prefetch_depth`` are the streamed
+    path's I/O knobs (ignored resident -- nothing streams); see
     :func:`repro.core.solver.estimate_solution` for their semantics.
+
+    ``y0`` warm-starts the iteration: the previous snapshot's solution (same
+    shape as ``b``'s solution) replaces the cold ``y0 = chi`` start, so a
+    slowly-drifting sequence's first residual starts at ~|dA| instead of
+    ~1.  The iterate is deflated on entry (a stale nullspace component must
+    not survive into the new solve) and the stopping denominator stays
+    ``||Z^ b||`` -- tolerances mean the same thing warm or cold.
 
     ``use_gemm_kernel`` routes the streamed iterations (and the chi build,
     where P1 is also a handle) through the fused Pallas stream-GEMM path:
@@ -402,7 +651,8 @@ def solve(
 
     Returns ``(solution, SolveReport)``; the report carries iterations, the
     final relative preconditioned residual, and the scratch-store traffic of
-    this solve.
+    this solve.  A run that never measured a residual (``max_iters=0``)
+    reports ``residual=nan, converged=False``.
     """
     spec = spec or SolverSpec()
     if solver_batch < 1:
@@ -422,8 +672,18 @@ def solve(
             rho_raw = estimate_rho(ctx, op.p2, prefetch_depth=depth)
             if hasattr(op, "rho"):
                 op.rho = rho_raw  # cache: later solves on this operator reuse it
-        gap = 1.0 - min(max(0.0, float(rho_raw)), 1.0)
-        rho = min(RHO_MAX, 1.0 - gap / RHO_GAP_SAFETY)
+        # Start from the raw power-iteration estimate (it converges to rho
+        # from below); Manteuffel-style adaptation during the solve grows the
+        # interval if the estimate's lag shows up as a missed contraction.
+        rho = min(RHO_MAX, max(0.0, float(rho_raw)))
+
+    w = None
+    if spec.method == "cg":
+        w = getattr(op, "deg", None)
+        if w is None:
+            # No degree metadata on the operator: fall back to the Euclidean
+            # inner product (exact only for uniform degrees).
+            w = jnp.ones((int(b.shape[0]),), jnp.float32)
 
     streamed = is_streamable(op.p1) or is_streamable(op.p2)
     use_k = bool(
@@ -433,9 +693,10 @@ def solve(
     )
     st = stream_stats()
     read0, panels0, h2d0 = st.bytes_read, st.panels, st.bytes_h2d
+    warm = y0 is not None
 
     with obs_trace.span(
-        "solve", method=spec.method, streamed=streamed
+        "solve", method=spec.method, streamed=streamed, warm=warm
     ) as sp:
         b = ctx.constrain(b, ctx.rowblock_spec)
         if streamed and use_k and is_streamable(op.p1):
@@ -448,23 +709,47 @@ def solve(
         if deflate:
             chi = deflate_constant(ctx, chi)
 
+        if warm:
+            if tuple(y0.shape) != tuple(chi.shape):
+                raise ValueError(
+                    f"warm start y0 shape {tuple(y0.shape)} does not match "
+                    f"the solution shape {tuple(chi.shape)}"
+                )
+            y_start = ctx.constrain(y0.astype(chi.dtype), ctx.rowblock_spec)
+            if deflate:
+                y_start = deflate_constant(ctx, y_start)
+        else:
+            y_start = chi  # historical cold start: y0 = chi = Z^ b
+
+        rho_final = rho
         if streamed:
-            y, iters, res, res_hist = _solve_streamed(
-                ctx, op.p2, chi, spec.method, deflate, tol, max_steps,
+            y, iters, res, res_hist, rho_final = _solve_streamed(
+                ctx, op.p2, chi, y_start, spec.method, deflate, tol, max_steps,
                 rho or 0.0, solver_batch, depth,
-                use_kernel=use_k and is_streamable(op.p2),
+                use_kernel=use_k and is_streamable(op.p2), w=w,
             )
+            if spec.method != "chebyshev":
+                rho_final = rho
         else:
             prog = _resident_program(ctx, spec.method, deflate, chi)
-            y, k_arr, res_arr, hist_arr = prog(
-                op.p2, chi, jnp.float32(tol), jnp.int32(max_steps),
-                jnp.float32(rho or 0.0),
-            )
+            if spec.method == "cg":
+                y, k_arr, res_arr, hist_arr = prog(
+                    op.p2, chi, y_start, jnp.asarray(w),
+                    jnp.float32(tol), jnp.int32(max_steps),
+                )
+            else:
+                y, k_arr, res_arr, hist_arr, rho_arr = prog(
+                    op.p2, chi, y_start, jnp.float32(tol), jnp.int32(max_steps),
+                    jnp.float32(rho or 0.0),
+                )
+                if spec.method == "chebyshev":
+                    rho_final = float(rho_arr)
             iters, res = int(k_arr), float(res_arr)
-            res_hist = [
-                float(r)
-                for r in np.asarray(hist_arr)[: min(iters, RES_HIST_CAP)]
-            ]
+            res_hist = _unrotate_hist(np.asarray(hist_arr), iters)
+        if iters == 0:
+            # The loop never ran (max_iters=0): no residual was ever
+            # measured -- report that honestly rather than inf/converged.
+            res = float("nan")
         sp.annotate(iterations=iters, residual=res)
         sp.fence(y)
 
@@ -473,7 +758,8 @@ def solve(
         method=spec.method,
         iterations=iters,
         residual=res,
-        converged=(spec.tolerance is None) or res <= spec.tolerance,
+        converged=(not math.isnan(res))
+        and ((spec.tolerance is None) or res <= spec.tolerance),
         tolerance=spec.tolerance,
         max_iters=max_steps,
         streamed=streamed,
@@ -482,11 +768,14 @@ def solve(
         bytes_h2d=st.bytes_h2d - h2d0,
         panels=st.panels - panels0,
         residuals=tuple(res_hist),
+        rho_final=rho_final,
+        warm_start=warm,
     )
     _OBS_REGISTRY.add_named({
         "solver.solves": 1.0,
         "solver.iterations": float(iters),
         "solver.not_converged": 0.0 if report.converged else 1.0,
+        "solver.warm_starts": 1.0 if warm else 0.0,
     })
     _OBS_REGISTRY.extend("solver.residuals", res_hist)
     return y, report

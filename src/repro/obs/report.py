@@ -60,6 +60,10 @@ def _solve_record(rep: Any) -> dict[str, Any]:
         "max_iters": int(rep.max_iters),
         "streamed": bool(rep.streamed),
         "rho": None if rep.rho is None else float(rep.rho),
+        "rho_final": None
+        if getattr(rep, "rho_final", None) is None
+        else float(rep.rho_final),
+        "warm_start": bool(getattr(rep, "warm_start", False)),
         "bytes_read": int(rep.bytes_read),
         "bytes_h2d": int(getattr(rep, "bytes_h2d", 0)),
         "panels": int(rep.panels),

@@ -124,6 +124,38 @@ def test_adaptive_solver_retrace_budget(ctx1):
     assert st.misses == warm_misses, "tolerance leaked into a program cache key"
 
 
+def test_warm_cg_retrace_budget(ctx1):
+    """Warm-started CG keeps the retrace budget: y0 is an *operand* of one
+    compiled program (cold pushes pass y0 = chi through the same program), so
+    steady-state pushes of a warm CG sequence add ZERO traces and ZERO cache
+    misses -- and a different tolerance / step cap still compiles nothing."""
+    from dataclasses import replace
+
+    cfg = CommuteConfig(
+        eps_rp=1e-2, d=3, q=3, schedule="xla", k_override=4,
+        solver="cg", solver_tol=1e-4, warm_start=True,
+    )
+    snaps = [_sym(32, 60 + t) for t in range(4)]
+    det = SequenceDetector(ctx1, cfg, top_k=5)
+    det.push(ctx1.put_matrix(snaps[0]))  # cold solve compiles the CG program
+    det.push(ctx1.put_matrix(snaps[1]))  # first warm solve: same program
+    st = program_cache_stats()
+    warm_traces, warm_misses = st.traces, st.misses
+    det.push(ctx1.put_matrix(snaps[2]))
+    det.push(ctx1.put_matrix(snaps[3]))
+    assert st.traces == warm_traces, "steady-state warm CG push retraced"
+    assert st.misses == warm_misses, "steady-state warm CG push missed the cache"
+
+    # tolerance / cap are operands of the CG program too
+    det2 = SequenceDetector(
+        ctx1, replace(cfg, solver_tol=1e-5, solver_max_iters=9), top_k=5
+    )
+    det2.push(ctx1.put_matrix(snaps[0]))
+    det2.push(ctx1.put_matrix(snaps[1]))
+    assert st.traces == warm_traces, "tolerance change retraced the CG program"
+    assert st.misses == warm_misses, "tolerance leaked into the CG cache key"
+
+
 def test_streamed_sequence_retrace_budget(ctx1):
     """The retrace budget holds out-of-core too: store-backed snapshots and
     the oocore chain reuse one compiled program set across the sequence."""

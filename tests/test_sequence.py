@@ -16,6 +16,11 @@ from repro.graphs import climate_snapshot_sequence, gmm_snapshot_sequence
 CFG = CommuteConfig(eps_rp=1e-2, d=6, q=8, schedule="xla")
 
 
+@pytest.fixture(params=["ctx1", "ctx22"])
+def ctx(request):
+    return request.getfixturevalue(request.param)
+
+
 def test_sequence_matches_pairwise_and_builds_once(ctx1):
     """T=4: transition scores == three fresh detect_anomalies calls, with
     exactly 4 chain builds (vs 6 for the pairwise path)."""
@@ -115,8 +120,188 @@ def test_sequence_donate_frees_previous(ctx1):
 
 def test_sequence_requires_two_snapshots(ctx1):
     det = SequenceDetector(ctx1, CFG)
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="0 snapshots"):
         det.finalize()
+
+
+def test_single_snapshot_finalizes_to_empty_result(ctx1):
+    """T=1 has zero transitions by definition: finalize() returns an empty
+    SequenceResult (not an exception -- only T=0 is a caller bug)."""
+    from repro.graphs import gmm_graph_sequence
+
+    det = SequenceDetector(ctx1, CFG, top_k=5)
+    assert det.push(gmm_graph_sequence(ctx1, n=32, seed=0).a1) is None
+    res = det.finalize()
+    assert res.transitions == [] and res.n_snapshots == 1
+    assert res.global_top_idx.shape == (0,)
+    assert res.global_top_val.shape == (0,)
+    assert res.global_top_step.shape == (0,)
+    assert res.chain_builds == 1
+    assert res.warmup_metrics is not None
+
+
+# ---------------------------------------------------------------------------
+# _release diagnosability (donate path)
+# ---------------------------------------------------------------------------
+
+
+class _FailingBuf:
+    """Device-buffer stand-in whose delete fails like an already-donated
+    buffer does."""
+
+    def __init__(self, exc):
+        self.exc = exc
+        self.calls = 0
+
+    def delete(self):
+        self.calls += 1
+        raise self.exc
+
+
+def test_release_warns_and_continues_on_delete_failure(ctx1):
+    """Expected delete failures (the double-buffering race) warn instead of
+    vanishing, and the release keeps going past the first failure."""
+    from repro.core.embedding import Embedding
+
+    det = SequenceDetector(ctx1, CFG, donate=True)
+    a = _FailingBuf(RuntimeError("buffer already donated"))
+    z = _FailingBuf(OSError("device gone"))
+    with pytest.warns(RuntimeWarning, match="delete failed") as rec:
+        det._release(a, Embedding(z=z, vol=1.0, op=None))
+    assert a.calls == 1 and z.calls == 1
+    assert len(rec) == 2
+
+
+def test_release_propagates_unexpected_errors(ctx1):
+    """Only the expected buffer errors are downgraded to warnings -- a
+    genuine programming error must surface (the former bare `except
+    Exception` ate everything)."""
+    from repro.core.embedding import Embedding
+
+    det = SequenceDetector(ctx1, CFG, donate=True)
+    bad = _FailingBuf(TypeError("programming error"))
+    with pytest.raises(TypeError, match="programming error"):
+        det._release(bad, Embedding(z=bad, vol=1.0, op=None))
+
+
+def test_release_skips_handles_without_delete(ctx1):
+    """Store-backed snapshot handles (no .delete) are the user's data: the
+    donate path skips them silently, no warning, no error."""
+    import warnings as _warnings
+
+    from repro.core.embedding import Embedding
+
+    class Plain:
+        pass
+
+    det = SequenceDetector(ctx1, CFG, donate=True)
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        det._release(Plain(), Embedding(z=Plain(), vol=1.0, op=None))
+
+
+# ---------------------------------------------------------------------------
+# warm-started sequences: same scores, far fewer iterations
+# ---------------------------------------------------------------------------
+
+
+def _drifting_snapshots(ctx, n, t_steps, storage):
+    """A slowly-drifting GMM sequence (no injections); oocore variants are
+    served as store-backed handles so the whole transition streams."""
+    seq = gmm_snapshot_sequence(
+        ctx, n, t_steps, seed=5, noise=1e-4, inject_steps=set()
+    )
+    if storage == "oocore":
+        from repro.store import TileStore
+
+        store = TileStore.create(None, n=n, grid=4)
+        for t, a in enumerate(seq.snapshots()):
+            store.put_snapshot(f"t{t:03d}", np.asarray(a))
+        return store.iter_snapshots()
+    return seq.snapshots()
+
+
+def _commute_scale(ctx, cfg, n, t_steps):
+    """The commute-distance scale V_G * E||z_i||^2 the anomaly scores are
+    measured in -- the natural atol anchor for warm-vs-cold comparisons (on
+    a quiet sequence the scores themselves sit orders of magnitude below
+    it)."""
+    from repro.core.embedding import commute_time_embedding
+
+    seq = gmm_snapshot_sequence(
+        ctx, n, t_steps, seed=5, noise=1e-4, inject_steps=set()
+    )
+    emb = commute_time_embedding(ctx, next(seq.snapshots()), cfg)
+    z = np.asarray(emb.z, np.float64)
+    return float(emb.vol) * float((z * z).sum(1).mean())
+
+
+@pytest.mark.parametrize("storage", ["resident", "oocore"])
+def test_warm_start_scores_allclose_cold(ctx, storage):
+    """Acceptance (1x1 AND 2x2 mesh, resident AND out-of-core): warm-started
+    sequence scores stay allclose (rtol 1e-4, atol 1e-4 of the
+    commute-distance scale) to the cold run, every right-endpoint report is
+    flagged warm, and warm iterations never exceed cold."""
+    from dataclasses import replace
+
+    n, t_steps = 48, 3
+    cold_cfg = CommuteConfig(
+        eps_rp=1e-2, d=3, q=8, schedule="xla", k_override=4,
+        solver="richardson", solver_tol=1e-4, oocore=storage == "oocore",
+    )
+    warm_cfg = replace(cold_cfg, warm_start=True)
+    cold = detect_sequence_anomalies(
+        ctx, _drifting_snapshots(ctx, n, t_steps, storage), cold_cfg, top_k=5
+    )
+    warm = detect_sequence_anomalies(
+        ctx, _drifting_snapshots(ctx, n, t_steps, storage), warm_cfg, top_k=5
+    )
+    scale = _commute_scale(ctx, replace(cold_cfg, oocore=False), n, t_steps)
+    for t, (c, w) in enumerate(zip(cold.transitions, warm.transitions)):
+        np.testing.assert_allclose(
+            np.asarray(w.scores), np.asarray(c.scores),
+            rtol=1e-4, atol=1e-4 * scale, err_msg=f"transition {t}",
+        )
+        assert w.solve_reports[1].warm_start
+        assert not c.solve_reports[1].warm_start
+        assert w.solve_reports[1].iterations <= c.solve_reports[1].iterations
+
+
+@pytest.mark.slow
+def test_warm_start_halves_iterations_on_drifting_sequence(ctx1):
+    """ISSUE 8 acceptance: on a slowly-drifting sequence, warm-started
+    tolerance-targeted solves (all three methods) take >= 2x fewer
+    iterations than cold from transition 2 onward, with scores allclose."""
+    from dataclasses import replace
+
+    n, t_steps = 96, 4
+    base = CommuteConfig(
+        eps_rp=1e-2, d=3, q=8, schedule="xla", k_override=6, solver_tol=1e-5
+    )
+    scale = _commute_scale(ctx1, replace(base, solver="cg"), n, t_steps)
+    for method in ("richardson", "chebyshev", "cg"):
+        cold_cfg = replace(base, solver=method)
+        warm_cfg = replace(cold_cfg, warm_start=True)
+        cold = detect_sequence_anomalies(
+            ctx1, _drifting_snapshots(ctx1, n, t_steps, "resident"),
+            cold_cfg, top_k=5,
+        )
+        warm = detect_sequence_anomalies(
+            ctx1, _drifting_snapshots(ctx1, n, t_steps, "resident"),
+            warm_cfg, top_k=5,
+        )
+        cold_its = [r.solve_reports[1].iterations for r in cold.transitions]
+        warm_its = [r.solve_reports[1].iterations for r in warm.transitions]
+        for t in range(1, t_steps - 1):  # transition 2 onward (1-based)
+            assert warm.transitions[t].solve_reports[1].converged
+            assert cold.transitions[t].solve_reports[1].converged
+            assert cold_its[t] >= 2 * warm_its[t], (method, cold_its, warm_its)
+        for t, (c, w) in enumerate(zip(cold.transitions, warm.transitions)):
+            np.testing.assert_allclose(
+                np.asarray(w.scores), np.asarray(c.scores),
+                rtol=1e-4, atol=1e-4 * scale,
+                err_msg=f"{method} transition {t}",
+            )
 
 
 def test_climate_sequence_truth_at_event(ctx1):

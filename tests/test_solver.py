@@ -126,7 +126,7 @@ def test_methods_allclose_to_fixed_q_baseline(ctx, storage):
     b = _rhs(ctx, n)
 
     sols, reports = {}, {}
-    for method in ("richardson", "chebyshev"):
+    for method in ("richardson", "chebyshev", "cg"):
         sols[method], reports[method] = solve(
             ctx, op, b, SolverSpec(method=method, tolerance=tol)
         )
@@ -139,8 +139,9 @@ def test_methods_allclose_to_fixed_q_baseline(ctx, storage):
         np.testing.assert_allclose(
             np.asarray(x), ref, rtol=1e-4, atol=1e-3, err_msg=method
         )
-    # the accelerator actually accelerated (rho is large on this graph)
+    # the accelerators actually accelerated (rho is large on this graph)
     assert reports["chebyshev"].iterations < reports["richardson"].iterations
+    assert reports["cg"].iterations < reports["chebyshev"].iterations
     op.release_scratch()
 
 
@@ -279,6 +280,99 @@ def test_release_scratch_raises_on_unexpected_error(ctx1, monkeypatch):
 
 
 # ---------------------------------------------------------------------------
+# warm starts: y0 seeds the solve, cold and warm share one compiled program
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["richardson", "chebyshev", "cg"])
+def test_warm_start_from_solution_converges_immediately(ctx, method):
+    """Seeding y0 with the converged solution collapses the solve to <= 2
+    steps (the first measured residual is already under tolerance) while the
+    warm solution stays allclose to the cold one -- warm starting changes the
+    iteration count, never the answer."""
+    a = _clustered(ctx)
+    op = chain_product(ctx, a, d_len=4, schedule="xla")
+    b = _rhs(ctx, 64)
+    tol = 1e-5
+    cold, rep_c = solve(ctx, op, b, SolverSpec(method=method, tolerance=tol))
+    warm, rep_w = solve(ctx, op, b, SolverSpec(method=method, tolerance=tol), y0=cold)
+    assert rep_c.converged and not rep_c.warm_start
+    assert rep_w.converged and rep_w.warm_start
+    assert rep_w.iterations <= 2 < rep_c.iterations
+    np.testing.assert_allclose(
+        np.asarray(warm), np.asarray(cold), rtol=1e-4, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("method", ["chebyshev", "cg"])
+def test_warm_start_streamed(ctx1, method):
+    """Out-of-core warm start: the streamed solve accepts y0 too, and a
+    solve seeded with the resident solution converges in <= 2 passes."""
+    n = 64
+    store = TileStore.create(None, n=n, grid=8)
+    a = _clustered(ctx1, n)
+    h = store.put_snapshot("a", np.asarray(a))
+    op_res = chain_product(ctx1, a, 4, schedule="xla")
+    op_str = chain_product(ctx1, h, 4, oocore=True)
+    b = _rhs(ctx1, n)
+    cold, _ = solve(ctx1, op_res, b, SolverSpec(method=method, tolerance=1e-5))
+    warm, rep = solve(
+        ctx1, op_str, b, SolverSpec(method=method, tolerance=1e-5), y0=cold
+    )
+    op_str.release_scratch()
+    assert rep.streamed and rep.warm_start and rep.converged
+    assert rep.iterations <= 2
+    np.testing.assert_allclose(
+        np.asarray(warm), np.asarray(cold), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_warm_start_shape_mismatch_raises(ctx1):
+    a = _clustered(ctx1)
+    op = chain_product(ctx1, a, d_len=4, schedule="xla")
+    b = _rhs(ctx1, 64, k=4)
+    bad = _rhs(ctx1, 64, k=3)
+    with pytest.raises(ValueError, match="warm start"):
+        solve(ctx1, op, b, SolverSpec(tolerance=1e-5), y0=bad)
+
+
+# ---------------------------------------------------------------------------
+# adaptive Chebyshev interval (Manteuffel-style)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("storage", ["resident", "oocore"])
+def test_chebyshev_adapts_underestimated_interval(ctx1, storage):
+    """An operator carrying a badly underestimated rho used to stall or
+    diverge Chebyshev; the adaptive interval grows it from the measured
+    contraction and the solve still converges to the same answer.  A correct
+    rho must NOT adapt (rho_final == rho)."""
+    import dataclasses
+
+    n, tol = 64, 1e-5
+    a = _clustered(ctx1, n)
+    if storage == "oocore":
+        store = TileStore.create(None, n=n, grid=8)
+        src = store.put_snapshot("a", np.asarray(a))
+    else:
+        src = a
+    op = chain_product(ctx1, src, 4, schedule="xla", oocore=storage == "oocore")
+    b = _rhs(ctx1, n)
+    ref, rep_ref = solve(ctx1, op, b, SolverSpec(method="chebyshev", tolerance=tol))
+    assert rep_ref.converged
+    assert rep_ref.rho_final == pytest.approx(rep_ref.rho)  # no false trigger
+
+    op_lo = dataclasses.replace(op, rho=0.5 * op.rho)
+    x, rep = solve(ctx1, op_lo, b, SolverSpec(method="chebyshev", tolerance=tol))
+    op.release_scratch()
+    assert rep.converged, rep
+    assert rep.rho_final is not None and rep.rho_final > rep.rho
+    np.testing.assert_allclose(
+        np.asarray(x), np.asarray(ref), rtol=1e-4, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
 # non-convergence is reported, not hidden
 # ---------------------------------------------------------------------------
 
@@ -292,6 +386,62 @@ def test_unreachable_tolerance_reports_not_converged(ctx1):
     )
     assert rep.iterations == 3 and not rep.converged
     assert rep.max_iters == 3 and rep.residual > 1e-6
+
+
+@pytest.mark.parametrize("storage", ["resident", "oocore"])
+def test_zero_iteration_budget_reports_no_residual(ctx1, storage):
+    """max_iters=0 measures nothing: the report must say NaN residual and
+    converged=False (it used to claim residual 0.0 / converged=True)."""
+    import math
+
+    n = 32
+    a = _clustered(ctx1, n)
+    if storage == "oocore":
+        store = TileStore.create(None, n=n, grid=4)
+        src = store.put_snapshot("a", np.asarray(a))
+    else:
+        src = a
+    op = chain_product(ctx1, src, 3, schedule="xla", oocore=storage == "oocore")
+    b = _rhs(ctx1, n)
+    y, rep = solve(
+        ctx1, op, b, SolverSpec(method="richardson", tolerance=1e-5, max_iters=0)
+    )
+    op.release_scratch()
+    assert rep.iterations == 0
+    assert math.isnan(rep.residual)
+    assert not rep.converged
+    assert rep.residuals == ()
+    assert np.asarray(y).shape == (n, 4)  # still returns chi
+
+
+# ---------------------------------------------------------------------------
+# residual-history ring buffer
+# ---------------------------------------------------------------------------
+
+
+def test_residual_history_rotates_past_ring_capacity(ctx1, monkeypatch):
+    """Runs longer than the ring capacity must return the last CAP residuals
+    in chronological order -- the raw buffer is rotated by iters mod cap
+    (it used to come back unrotated, splicing newest and oldest entries)."""
+    from repro.core.solvers import driver as drv
+
+    a = _clustered(ctx1)
+    op = chain_product(ctx1, a, d_len=4, schedule="xla")
+    b = _rhs(ctx1, 64)
+    spec = SolverSpec(method="richardson", tolerance=1e-30, max_iters=20)
+    _, full = solve(ctx1, op, b, spec)
+    assert len(full.residuals) == 20
+    assert full.residuals[-1] == pytest.approx(full.residual)
+
+    # RES_HIST_CAP is part of the program cache key, so shrinking it compiles
+    # a fresh program rather than replaying the stale 512-slot one.
+    monkeypatch.setattr(drv, "RES_HIST_CAP", 8)
+    _, small = solve(ctx1, op, b, spec)
+    assert len(small.residuals) == 8
+    np.testing.assert_array_equal(
+        np.asarray(small.residuals), np.asarray(full.residuals[-8:])
+    )
+    assert small.residuals[-1] == pytest.approx(small.residual)
 
 
 # ---------------------------------------------------------------------------
