@@ -148,6 +148,16 @@ def warmstart(n=96, t_steps=4, tol=1e-5, noise=1e-4, seed=5, out=print):
             "ratios_from_transition_2": ratios,
             "cold_seconds": cold.transition_seconds,
             "warm_seconds": warm.transition_seconds,
+            # chain-build cost per transition (schema 2): phase seconds and
+            # logical GEMM FLOPs from the per-push registry deltas
+            "chain_seconds": [
+                float(m.get("phase.chain.seconds", 0.0))
+                for m in warm.transition_metrics
+            ],
+            "chain_gemm_flops": [
+                float(m.get("chain.gemm_flops", 0.0))
+                for m in warm.transition_metrics
+            ],
             "score_dev_over_scale": dev, "converged": converged, "pass": ok,
         }
         out(f"[bench_sequence]  {method:10s} | {str(cold_its):15s} "
@@ -168,18 +178,156 @@ def warmstart(n=96, t_steps=4, tol=1e-5, noise=1e-4, seed=5, out=print):
     }
 
 
+def incremental(n=96, t_steps=5, tol=1e-6, seed=5, delta_rank=6,
+                delta_budget=0.1, out=print):
+    """ISSUE 9 acceptance bar: incremental delta-chain vs full rebuilds.
+
+    A slowly-drifting n=96 sequence (3 nodes move per step, no injections --
+    near-low-rank ``dS`` per transition) scored twice with identical solver
+    settings: full rebuild every snapshot vs ``incremental_chain=True``.
+    Asserted, not just reported:
+
+    * every transition after the first is an incremental update (1 full
+      rebuild total, T-1 updates, 0 drift fallbacks);
+    * per incremental transition, chain-phase GEMM FLOPs and scratch bytes
+      (registry counters ``chain.gemm_flops`` / ``chain.scratch_bytes``, read
+      from ``SequenceResult.transition_metrics``) are >= 3x below the full
+      rebuild's;
+    * scores agree with the full-rebuild path to 1e-3 of the commute-distance
+      scale ``V_G * E||z_i||^2`` (the unit scores are measured in; the rank-r
+      correction leaves a truncation floor well below it, measured ~1e-4).
+    """
+    ctx = trivial_context()
+    base = CommuteConfig(
+        eps_rp=1e-2, d=3, q=8, schedule="xla", k_override=6,
+        solver="cg", solver_tol=tol, warm_start=True,
+    )
+    inc_cfg = replace(base, incremental_chain=True, delta_rank=delta_rank,
+                      delta_budget=delta_budget)
+
+    def snaps():
+        return gmm_snapshot_sequence(
+            ctx, n, t_steps, seed=seed, noise=0.02, inject_steps=set(),
+            drift_nodes=3,
+        ).snapshots()
+
+    emb = commute_time_embedding(ctx, next(snaps()), base)
+    z = np.asarray(emb.z, np.float64)
+    scale = float(emb.vol) * float((z * z).sum(1).mean())
+
+    full = detect_sequence_anomalies(ctx, snaps(), base, top_k=10)
+    inc = detect_sequence_anomalies(ctx, snaps(), inc_cfg, top_k=10)
+
+    def chain_counter(metrics, name):
+        return float(metrics.get(f"chain.{name}", 0.0))
+
+    # Full-rebuild unit costs from the full run's first transition (every
+    # transition rebuilds there, so any index works).
+    full_m = full.transition_metrics[0]
+    full_flops = chain_counter(full_m, "gemm_flops")
+    full_scratch = chain_counter(full_m, "scratch_bytes")
+
+    rebuilds = sum(
+        chain_counter(m, "full_rebuilds") for m in inc.transition_metrics
+    ) + chain_counter(inc.warmup_metrics or {}, "full_rebuilds")
+    updates = sum(
+        chain_counter(m, "incremental_updates") for m in inc.transition_metrics
+    )
+    fallbacks = sum(
+        chain_counter(m, "drift_fallbacks") for m in inc.transition_metrics
+    )
+
+    dev = max(
+        float(np.max(np.abs(np.asarray(i.scores, np.float64)
+                            - np.asarray(f.scores, np.float64))))
+        for f, i in zip(full.transitions, inc.transitions)
+    ) / scale
+
+    out(f"[bench_sequence] incremental n={n} t_steps={t_steps} "
+        f"rank={delta_rank} budget={delta_budget} commute_scale={scale:.3e}")
+    out(f"[bench_sequence]  rebuilds={int(rebuilds)} updates={int(updates)} "
+        f"fallbacks={int(fallbacks)}  max|dscore|/scale={dev:.2e}")
+
+    transitions, flops_ratios, scratch_ratios = [], [], []
+    for t, m in enumerate(inc.transition_metrics):
+        flops = chain_counter(m, "gemm_flops")
+        scratch = chain_counter(m, "scratch_bytes")
+        is_update = chain_counter(m, "incremental_updates") > 0
+        rec = {
+            "index": t,
+            "incremental": bool(is_update),
+            "chain_seconds": float(m.get("phase.chain.seconds", 0.0)),
+            "chain_gemm_flops": flops,
+            "chain_scratch_bytes": scratch,
+            "flops_ratio_vs_full": full_flops / max(flops, 1.0),
+            "scratch_ratio_vs_full": full_scratch / max(scratch, 1.0),
+        }
+        transitions.append(rec)
+        if is_update:
+            flops_ratios.append(rec["flops_ratio_vs_full"])
+            scratch_ratios.append(rec["scratch_ratio_vs_full"])
+        out(f"[bench_sequence]  transition {t}: "
+            f"{'delta  ' if is_update else 'rebuild'} "
+            f"chain {rec['chain_seconds']*1e3:7.1f} ms, "
+            f"{flops/1e6:8.2f} MFLOP ({rec['flops_ratio_vs_full']:.2f}x less), "
+            f"scratch {scratch/1e3:8.1f} kB "
+            f"({rec['scratch_ratio_vs_full']:.2f}x less)")
+
+    ok = (
+        int(rebuilds) == 1
+        and int(updates) == t_steps - 1
+        and int(fallbacks) == 0
+        and dev <= 1e-3
+        and all(r >= 3.0 for r in flops_ratios)
+        and all(r >= 3.0 for r in scratch_ratios)
+    )
+    out(f"[bench_sequence]  incremental acceptance: "
+        f"{'PASS' if ok else 'FAIL'}")
+    assert int(rebuilds) == 1 and int(updates) == t_steps - 1, (
+        f"expected 1 rebuild + {t_steps - 1} updates, got "
+        f"{int(rebuilds)} rebuilds / {int(updates)} updates"
+    )
+    assert int(fallbacks) == 0, f"unexpected drift fallbacks: {int(fallbacks)}"
+    assert dev <= 1e-3, f"incremental scores deviate {dev:.2e} x commute scale"
+    assert all(r >= 3.0 for r in flops_ratios), (
+        f"chain GEMM FLOPs not >= 3x below full rebuild: {flops_ratios}"
+    )
+    assert all(r >= 3.0 for r in scratch_ratios), (
+        f"chain scratch bytes not >= 3x below full rebuild: {scratch_ratios}"
+    )
+    return {
+        "config": {"n": n, "t_steps": t_steps, "tol": tol, "seed": seed,
+                   "delta_rank": delta_rank, "delta_budget": delta_budget,
+                   "d": 3, "k_rp": 6},
+        "commute_scale": scale,
+        "full_rebuild_gemm_flops": full_flops,
+        "full_rebuild_scratch_bytes": full_scratch,
+        "rebuilds": int(rebuilds), "updates": int(updates),
+        "fallbacks": int(fallbacks),
+        "score_dev_over_scale": dev,
+        "transitions": transitions,
+        "pass": ok,
+    }
+
+
 def trajectory(out_path, out=print):
     """Canonical perf-trajectory artifact (``BENCH_sequence.json``).
 
-    The warmstart grid under a stable schema: per-method cold/warm iteration
-    trajectories, the >= 2x ratios, per-transition seconds and the score
-    deviation, so warm-start regressions show up in the weekly artifact
-    diff."""
+    Schema 2: the warm-start grid (per-method cold/warm iteration
+    trajectories, >= 2x ratios, per-transition seconds and score deviation,
+    now with per-transition chain-build seconds / logical GEMM FLOPs columns
+    from the metrics registry) plus the incremental delta-chain acceptance
+    section, so both warm-start and incremental-chain regressions show up in
+    the weekly artifact diff."""
     res = warmstart(out=out)
-    result = {"bench": "sequence_trajectory", "schema": 1, **res}
+    inc_res = incremental(out=out)
+    result = {
+        "bench": "sequence_trajectory", "schema": 2, **res,
+        "incremental": inc_res,
+    }
     Path(out_path).write_text(json.dumps(result, indent=2))
-    out(f"[bench_sequence] trajectory: all_pass={res['all_pass']}; "
-        f"wrote {out_path}")
+    out(f"[bench_sequence] trajectory: all_pass="
+        f"{res['all_pass'] and inc_res['pass']}; wrote {out_path}")
     return result
 
 
@@ -191,14 +339,22 @@ def main():
                     help="run the warm-start acceptance grid (asserts the "
                          ">= 2x iteration bar) instead of the amortization "
                          "bench")
+    ap.add_argument("--incremental", action="store_true",
+                    help="run the incremental delta-chain acceptance bench "
+                         "(asserts >= 3x chain FLOPs/scratch reduction and "
+                         "1e-3-of-scale score agreement) instead of the "
+                         "amortization bench")
     ap.add_argument("--trajectory", default=None, metavar="PATH",
-                    help="write the canonical warm-start perf-trajectory "
-                         "artifact (BENCH_sequence.json) and exit")
+                    help="write the canonical perf-trajectory artifact "
+                         "(BENCH_sequence.json; warm-start grid + incremental "
+                         "delta-chain section) and exit")
     args = ap.parse_args()
     if args.trajectory:
         trajectory(args.trajectory)
     elif args.warmstart:
         warmstart()
+    elif args.incremental:
+        incremental()
     else:
         run(n=args.n, t_steps=args.t_steps)
 

@@ -10,6 +10,13 @@ from repro.core.chain import (
     chain_product,
     reset_chain_build_count,
 )
+from repro.core.delta_chain import (
+    BaseChain,
+    build_base_chain,
+    full_build_gemm_cost,
+    truncate_factors,
+    try_delta_update,
+)
 from repro.core.distmatrix import (
     SCHEDULES,
     DistContext,
@@ -45,8 +52,13 @@ from repro.core.tiles import (
 )
 
 __all__ = [
+    "BaseChain",
     "CADResult",
     "ChainOperator",
+    "build_base_chain",
+    "full_build_gemm_cost",
+    "truncate_factors",
+    "try_delta_update",
     "CommuteConfig",
     "ProgramCacheStats",
     "clear_program_cache",

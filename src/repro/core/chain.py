@@ -31,20 +31,26 @@ from jax.sharding import PartitionSpec as P
 from repro.core import laplacian as lap
 from repro.core.distmatrix import DistContext, add_scaled_identity, matmul
 from repro.core.tiles import is_streamable, sharded_zeros, stream_stats, tile_map
+from repro.obs.metrics import REGISTRY as _OBS_REGISTRY
 
-# Build counter: chain_product is the O(n^3) hot spot, so the sequence engine
-# (and its tests) track exactly how many times it runs.
-_BUILD_COUNT = 0
+# Build counting: chain_product is the O(n^3) hot spot, so the sequence engine
+# (and its tests) track exactly how many times it runs.  The storage is the
+# obs metrics registry (``chain.builds``, alongside ``chain.gemm_flops`` /
+# ``chain.gemm_bytes`` and the incremental-update counters from
+# :mod:`repro.core.delta_chain`) so rebuild-vs-incremental counts flow through
+# RunReport and bench registry deltas like every other metric; these two
+# functions are the legacy facade over it.
+_BUILD_BASE = 0.0  # registry value at the last reset_chain_build_count()
 
 
 def chain_build_count() -> int:
     """Number of chain operators built since process start (or last reset)."""
-    return _BUILD_COUNT
+    return int(_OBS_REGISTRY.value("chain.builds") - _BUILD_BASE)
 
 
 def reset_chain_build_count() -> None:
-    global _BUILD_COUNT
-    _BUILD_COUNT = 0
+    global _BUILD_BASE
+    _BUILD_BASE = _OBS_REGISTRY.value("chain.builds")
 
 
 @jax.tree_util.register_pytree_node_class
@@ -67,22 +73,40 @@ class ChainOperator:
     p2: jax.Array  # (n, n)  Z^ @ L                    (array or store handle)
     deg: jax.Array  # (n,)
     vol: jax.Array  # scalar V_G
+    # Optional incremental low-rank correction (repro.core.delta_chain): the
+    # operator then represents P1' = diag(p1_scale) P1 diag(p1_scale) + u1 v1^T
+    # and P2' = P2 + u2 v2^T around the *base* p1/p2 buffers.  The solve
+    # driver applies them as rank-r epilogues in every mat-vec; None means an
+    # ordinary (uncorrected) operator.
+    p1_scale: jax.Array | None = None  # (n,)
+    u1: jax.Array | None = None  # (n, r)
+    v1: jax.Array | None = None  # (n, r)
+    u2: jax.Array | None = None  # (n, r)
+    v2: jax.Array | None = None  # (n, r)
     prefetch_depth: int = 2  # panel-pipeline staging depth for streamed consumers
     rho: float | None = None  # rho(S~^{2^d}) power-iteration estimate (build-time)
     # Streamed consumers route mat-vecs through the fused Pallas stream-GEMM
     # kernel path (stored-width panel shipping + in-kernel decode + fused
     # solve epilogue); set by the out-of-core build, inherited by solve().
     use_gemm_kernel: bool = False
+    # True when p1/p2 belong to a live delta_chain.BaseChain shared with other
+    # operators: release_scratch() is then a no-op -- BaseChain.release() is
+    # the single owner of that scratch (prevents a corrected operator's
+    # retirement from freeing panels the base or its siblings still stream).
+    shared_base: bool = False
 
     def tree_flatten(self):
-        return (self.p1, self.p2, self.deg, self.vol), (
-            self.prefetch_depth, self.rho, self.use_gemm_kernel,
-        )
+        return (
+            self.p1, self.p2, self.deg, self.vol,
+            self.p1_scale, self.u1, self.v1, self.u2, self.v2,
+        ), (self.prefetch_depth, self.rho, self.use_gemm_kernel, self.shared_base)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(
-            *children, prefetch_depth=aux[0], rho=aux[1], use_gemm_kernel=aux[2]
+            *children,
+            prefetch_depth=aux[0], rho=aux[1], use_gemm_kernel=aux[2],
+            shared_base=aux[3],
         )
 
     def release_scratch(self) -> None:
@@ -95,7 +119,13 @@ class ChainOperator:
         snapshot) is *warned*, never raised: scoring already succeeded and
         the scratch is disposable -- but a silently growing scratch dir must
         be diagnosable, so only the expected store errors are swallowed.
+
+        Operators sharing a delta-chain base (``shared_base=True``) skip the
+        removal entirely: their p1/p2 are the base's buffers, owned and
+        eventually retired by ``BaseChain.release()``.
         """
+        if self.shared_base:
+            return
         for buf in (self.p1, self.p2):
             store = getattr(buf, "store", None)
             if store is not None and hasattr(buf, "snap_id"):
@@ -162,9 +192,18 @@ def chain_product(
     tile_codec: str = "raw",
     prefetch_depth: int | None = None,
     use_gemm_kernel: bool = False,
+    level_sink: dict | None = None,
 ) -> ChainOperator:
     """Build the chain operator from ``a``: a resident sharded adjacency or a
     store-backed snapshot handle.
+
+    ``level_sink`` (a caller-provided dict) opts into retaining the chain's
+    intermediate levels for incremental delta updates
+    (:mod:`repro.core.delta_chain`): on return ``level_sink["t"]`` holds
+    T_0 .. T_{d-1} and ``level_sink["p"]`` holds P_0 .. P_{d-2} (arrays
+    resident, store handles out-of-core -- the oocore build then skips the
+    usual intermediate-snapshot removal for retained levels; the caller owns
+    their lifetime via ``BaseChain.release()``).
 
     With a handle, every consumer of A streams: the degree pass, the
     normalized-adjacency build (S, the first chain GEMM's operand, assembled
@@ -199,8 +238,19 @@ def chain_product(
     """
     if d_len < 1:
         raise ValueError("chain length d must be >= 1")
-    global _BUILD_COUNT
-    _BUILD_COUNT += 1
+    # Logical GEMM cost of a full build -- 2(d-1)+1 dense n x n GEMMs at
+    # 2 n^3 FLOPs / 3 n^2 fp32 operands each (the same convention the delta
+    # path's skinny-pass ledger uses, so the registry ratio is meaningful).
+    n_nodes = int(a.shape[0])
+    n_gemms = 2 * (d_len - 1) + 1
+    _OBS_REGISTRY.add_named({
+        "chain.builds": 1.0,
+        "chain.gemm_flops": n_gemms * 2.0 * float(n_nodes) ** 3,
+        "chain.gemm_bytes": n_gemms * 3.0 * float(n_nodes) ** 2 * 4.0,
+        # Scratch materialized: one fresh n^2 matrix per GEMM plus the S~
+        # assembly (the matrices an out-of-core build spills to the store).
+        "chain.scratch_bytes": (n_gemms + 1) * float(n_nodes) ** 2 * 4.0,
+    })
     if oocore:
         from repro.core.oochain import chain_product_oocore
 
@@ -216,6 +266,7 @@ def chain_product(
             tile_codec=tile_codec,
             prefetch_depth=prefetch_depth,
             use_gemm_kernel=use_gemm_kernel,
+            level_sink=level_sink,
         )
     mm = partial(matmul, ctx, schedule=schedule, out_dtype=dtype, use_kernel=use_kernel)
 
@@ -227,9 +278,15 @@ def chain_product(
 
     t = s
     p = add_scaled_identity(ctx, s, 1.0)  # I + S
+    t_levels, p_levels = [t], []
     for _ in range(1, d_len):
+        p_levels.append(p)  # P_{lvl-1}, multiplied against by dP_lvl
         t = mm(t, t)  # S^{2^k}
+        t_levels.append(t)
         p = jnp.add(mm(p, t), p)  # P (I + T) = P T + P, no identity materialized
+    if level_sink is not None:
+        level_sink["t"] = t_levels
+        level_sink["p"] = p_levels[1:]  # P_0 = I + T_0 is applied implicitly
 
     inv_sqrt = jnp.where(deg > 0, jax.lax.rsqrt(jnp.maximum(deg, 1e-30)), 0.0)
     p1 = tile_map(

@@ -1,0 +1,412 @@
+"""Incremental delta-chain updates: skip the O(n^3) rebuild on small drift.
+
+A slowly-drifting transition changes the chain operator by a *small-norm*
+perturbation: Online Anomaly Detection Systems Using Incremental Commute Time
+(arXiv:1107.3894) shows commute-time quantities admit incremental updates
+under such perturbations, and the Rademacher-sketch machinery already used by
+``edge_projection`` (Khoa & Chawla, arXiv:1111.4541) gives the low-rank
+compression primitive.  This module implements that path for the squaring
+chain:
+
+1. **Sketch** ``dS = S~' - S~`` against a counter-generated Rademacher test
+   matrix (never materializing dS): a randomized range-finder compresses it
+   to a rank-r factorization ``U0 V0^T``.  The same sketch yields the *drift
+   monitor* ``||dS W||_F / ||S~ W||_F`` for free.
+2. **Propagate** the correction through the squaring recurrence.  With
+   ``T_l = T_{l-1}^2`` and ``P_l = P_{l-1}(I + T_l)`` (all T_l symmetric,
+   powers of S commute):
+
+       dT_l = [T U, U] [V, T V + V (U^T V)]^T               (rank 2r)
+       dP_l = [E, P Ut + E (F^T Ut)] [F + T_l F, Vt]^T      (rank 2r)
+
+   where (U, V) = dT_{l-1}, (E, F) = dP_{l-1}, (Ut, Vt) = dT_l -- every
+   product against the *base* chain is a skinny n x r panel GEMM through
+   :func:`repro.core.distmatrix.matmul_rowblock` (streams store-backed base
+   levels through the panel pipeline; resident bases use one eager dot), so
+   a level costs O(n^2 r) instead of the rebuild's O(n^3).  Each level
+   recompresses 2r -> r via an exact QR + small-SVD factor truncation.
+3. **Correct the operator.**  ``P1' = diag(s) P1 diag(s) + E~ F~^T`` is
+   *exact* (s = sqrt(deg) * 1/sqrt(deg'), E~ = D'^{-1/2} E); ``dP2 =
+   P1' L' - P1 L`` is compressed by a two-pass range-finder on its implicit
+   forward/adjoint applies (the base ``L`` mat-vec is reconstructed from the
+   retained T_0 = S~, so no base adjacency is kept).  The corrected
+   :class:`~repro.core.chain.ChainOperator` carries ``(p1_scale, u1, v1,
+   u2, v2)`` -- every solver method and the fused streamed kernel pass apply
+   them as cheap rank-r epilogues around the unchanged base mat-vec.
+
+All dense-factor algebra here runs eagerly (host numpy for the O(n r^2)
+QR/SVD pieces, ``matmul_rowblock`` for the n^2 passes), so the delta path
+adds ZERO tile-program traces; the only new compiled program is the
+corrected resident solve loop, keyed once per correction rank.
+"""
+
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import laplacian as lap
+from repro.core import rng as crng
+from repro.core.chain import ChainOperator, chain_product
+from repro.core.distmatrix import DistContext, matmul_rowblock
+from repro.core.tiles import is_streamable
+from repro.obs.metrics import REGISTRY as _OBS_REGISTRY
+
+# Range-finder oversampling: the sketch width is delta_rank + DELTA_OVERSAMPLE
+# columns; the extra columns absorb the tail so the leading r directions are
+# captured accurately (Halko/Martinsson/Tropp's standard few-column margin).
+DELTA_OVERSAMPLE = 2
+
+
+# ---------------------------------------------------------------------------
+# logical GEMM accounting (the counters the >= 3x acceptance bar reads)
+# ---------------------------------------------------------------------------
+
+
+class _GemmLedger:
+    """Logical FLOP/byte counts for chain-phase GEMM passes.
+
+    One convention everywhere (fp32, counted at dispatch, not measured -- the
+    point is a stable apples-to-apples ratio between the rebuild and the
+    delta path):
+
+    * ``flops``: a full (n, n) x (n, n) GEMM is ``2 n^3``; a skinny
+      (n, n) x (n, w) pass is ``2 n^2 w``.
+    * ``bytes``: operand + result traffic -- ``3 n^2 * 4`` for the full GEMM,
+      ``(n^2 + 2 n w) * 4`` for a skinny pass.  Note a skinny pass still
+      *reads* its n^2 operand once, so this metric shrinks only ~linearly
+      with pass count, not with width.
+    * ``scratch``: bytes of chain scratch *materialized* -- the full build
+      writes a fresh n^2 matrix per GEMM (the T/P levels, P1, P2, all of
+      which the out-of-core build spills to the scratch store), ``n^2 * 4``
+      each; a skinny pass writes only its (n, w) result block, ``n w * 4``.
+      This is the residency/spill axis the incremental path collapses.
+    """
+
+    def __init__(self) -> None:
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.scratch = 0.0
+
+    def skinny(self, n: int, w: int) -> None:
+        self.flops += 2.0 * n * n * w
+        self.bytes += (n * n + 2.0 * n * w) * 4.0
+        self.scratch += n * w * 4.0
+
+
+def full_build_gemm_cost(n: int, d_len: int) -> tuple[float, float, float]:
+    """(flops, bytes, scratch) of one full chain build.
+
+    ``2 (d-1) + 1`` dense n x n GEMMs (d-1 squarings, d-1 P updates, one
+    P1 @ L); scratch additionally counts the S~ assembly, so ``2 d`` fresh
+    n^2 matrices are materialized overall.
+    """
+    gemms = 2 * (d_len - 1) + 1
+    return (
+        gemms * 2.0 * n**3,
+        gemms * 3.0 * n * n * 4.0,
+        (gemms + 1) * n * n * 4.0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# base-chain retention
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BaseChain:
+    """A full chain build plus the retained per-level factors deltas need.
+
+    ``t_levels`` holds T_0 .. T_{d-1} (T_0 = S~); ``p_levels`` holds
+    P_1 .. P_{d-2} (P_0 = I + T_0 is applied implicitly, the final P_{d-1}
+    is never needed).  Arrays or store-backed handles, matching the build.
+    ``op`` is the base operator with ``shared_base=True`` stamped on it, so
+    the sequence engine's per-snapshot ``release_scratch()`` cannot retire
+    scratch that corrected operators still stream; :meth:`release` is the
+    one place the base scratch actually dies.
+    """
+
+    op: ChainOperator
+    t_levels: list = field(default_factory=list)
+    p_levels: list = field(default_factory=list)
+    d_len: int = 1
+    deflate: bool = True
+    released: bool = False
+
+    def release(self) -> None:
+        """Retire the base: operator scratch plus every retained level.
+
+        Idempotent -- a second release is a no-op, never a double-free (the
+        regression the shared-base lifecycle audit guards).
+        """
+        if self.released:
+            return
+        self.released = True
+        self.op.shared_base = False
+        self.op.release_scratch()
+        for buf in (*self.t_levels, *self.p_levels):
+            store = getattr(buf, "store", None)
+            if store is not None and hasattr(buf, "snap_id"):
+                try:
+                    store.remove_snapshot(buf.snap_id)
+                except (OSError, ValueError, KeyError) as e:
+                    warnings.warn(
+                        f"BaseChain.release: could not remove retained level "
+                        f"{buf.snap_id!r} ({e!r})",
+                        RuntimeWarning,
+                        stacklevel=2,
+                    )
+        self.t_levels, self.p_levels = [], []
+
+
+def build_base_chain(
+    ctx: DistContext, a, cfg, *, use_kernel: bool = False
+) -> BaseChain:
+    """Full chain build that also retains the levels delta updates multiply
+    against.  Counts one ``chain.full_rebuilds`` (the drift monitor's
+    fallback lands here too, so rebuild-vs-incremental is one registry pair).
+    """
+    sink: dict = {}
+    op = chain_product(
+        ctx,
+        a,
+        cfg.d,
+        schedule=cfg.schedule,
+        dtype=cfg.dtype,
+        deflate=cfg.deflate,
+        fuse_l=cfg.fuse_l,
+        use_kernel=use_kernel,
+        oocore=cfg.oocore,
+        oocore_work=cfg.oocore_dir,
+        oocore_panel_rows=cfg.oocore_panel_rows,
+        tile_codec=cfg.tile_codec,
+        prefetch_depth=cfg.prefetch_depth,
+        use_gemm_kernel=cfg.use_gemm_kernel,
+        level_sink=sink,
+    )
+    op.shared_base = True
+    _OBS_REGISTRY.add_named({"chain.full_rebuilds": 1.0})
+    return BaseChain(
+        op=op,
+        t_levels=list(sink.get("t", ())),
+        p_levels=list(sink.get("p", ())),
+        d_len=cfg.d,
+        deflate=cfg.deflate,
+    )
+
+
+# ---------------------------------------------------------------------------
+# small host-side factor algebra
+# ---------------------------------------------------------------------------
+
+
+def truncate_factors(
+    u: np.ndarray, v: np.ndarray, r: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Best rank-r recompression of ``u @ v.T`` (exact, O(n r^2)).
+
+    QR both factors, SVD the small core: ``u v^T = qu (ru rv^T) qv^T``;
+    keeping the top r singular triplets of the core is the optimal rank-r
+    approximation of the product itself.
+    """
+    qu, ru = np.linalg.qr(u.astype(np.float64))
+    qv, rv = np.linalg.qr(v.astype(np.float64))
+    w, s, zt = np.linalg.svd(ru @ rv.T)
+    rr = min(int(r), s.size)
+    u_t = qu @ (w[:, :rr] * s[:rr])
+    v_t = qv @ zt[:rr].T
+    return u_t.astype(np.float32), v_t.astype(np.float32)
+
+
+def _rademacher_omega(n: int, m: int, seed: int) -> np.ndarray:
+    """(n, m) +/-1 test matrix from the counter-based hash (zero stored
+    randomness, deterministic across hosts -- same contract as the edge
+    projection's Rademacher field)."""
+    rows = jnp.arange(n, dtype=jnp.uint32)[:, None]
+    cols = jnp.arange(m, dtype=jnp.uint32)[None, :]
+    h = crng.hash_u32(np.uint32(int(seed) & 0xFFFFFFFF), rows, cols)
+    return np.asarray(1.0 - 2.0 * (h >> 31).astype(jnp.float32), np.float32)
+
+
+# ---------------------------------------------------------------------------
+# the incremental update
+# ---------------------------------------------------------------------------
+
+
+class _Passes:
+    """Skinny-GEMM passes against big operands, with ledger accounting."""
+
+    def __init__(self, ctx: DistContext, depth, ledger: _GemmLedger):
+        self.ctx = ctx
+        self.depth = depth
+        self.ledger = ledger
+
+    def mm(self, mat, x_np: np.ndarray) -> np.ndarray:
+        """mat @ x for an (n, w) host operand; mat is resident or a handle."""
+        n, w = int(mat.shape[0]), int(x_np.shape[1])
+        self.ledger.skinny(n, w)
+        x = self.ctx.put_rowblock(jnp.asarray(x_np, jnp.float32))
+        out = matmul_rowblock(self.ctx, mat, x, prefetch_depth=self.depth)
+        return np.asarray(out, np.float32)
+
+
+def try_delta_update(
+    ctx: DistContext, base: BaseChain, a, cfg
+) -> ChainOperator | None:
+    """Corrected operator for snapshot ``a`` against ``base``, or ``None``.
+
+    ``None`` means the sketched drift ``||dS W||_F / ||S~ W||_F`` exceeded
+    ``cfg.delta_budget`` and the caller must rebuild.  Deltas are always
+    measured against the *last full rebuild* (never chained delta-on-delta),
+    so the same budget bounds both per-transition drift and accumulated
+    drift, and incremental error cannot compound across transitions.
+    """
+    n = int(a.shape[0])
+    r = int(cfg.delta_rank)
+    m = r + DELTA_OVERSAMPLE
+    depth = cfg.prefetch_depth
+    ledger = _GemmLedger()
+    ps = _Passes(ctx, depth, ledger)
+
+    t_lv, p_lv = base.t_levels, base.p_levels
+    if len(t_lv) != base.d_len:
+        raise ValueError(
+            f"base chain retained {len(t_lv)} T levels for d={base.d_len}; "
+            f"was it built with build_base_chain()?"
+        )
+
+    # -- current snapshot's degree data (needed by the corrected op anyway) --
+    deg_new = lap.degrees(ctx, a, prefetch_depth=depth)
+    vol_new = lap.volume(ctx, deg_new)
+    deg_n = np.asarray(deg_new, np.float64)
+    vol_n = float(vol_new)
+    inv_sqrt_n = np.where(deg_n > 0, 1.0 / np.sqrt(np.maximum(deg_n, 1e-30)), 0.0)
+    deg_b = np.asarray(base.op.deg, np.float64)
+    vol_b = float(base.op.vol)
+    sqrt_b = np.sqrt(np.maximum(deg_b, 0.0))
+
+    def s_new(x: np.ndarray) -> np.ndarray:
+        """S~' x from the raw snapshot: D'^{-1/2} A' D'^{-1/2} x (- u' u'^T x)."""
+        y = inv_sqrt_n[:, None] * ps.mm(a, (inv_sqrt_n[:, None] * x).astype(np.float32))
+        if base.deflate:
+            u = np.sqrt(np.maximum(deg_n, 0.0) / max(vol_n, 1e-30))
+            y = y - u[:, None] * (u @ x)
+        return y.astype(np.float32)
+
+    # -- 1. sketch dS and measure drift -------------------------------------
+    omega = _rademacher_omega(n, m, cfg.seed + 0x5EED)
+    s_base_w = ps.mm(t_lv[0], omega)  # S~ W (base, retained T_0)
+    s_new_w = s_new(omega)  # S~' W (implicit, from the raw snapshot)
+    dy = s_new_w - s_base_w
+    base_norm = max(float(np.linalg.norm(s_base_w)), 1e-30)
+    drift = float(np.linalg.norm(dy)) / base_norm
+    _OBS_REGISTRY.append("chain.drift", drift)
+    _OBS_REGISTRY.set_gauge("chain.drift_last", drift)
+    if drift > float(cfg.delta_budget):
+        _OBS_REGISTRY.add_named({"chain.drift_fallbacks": 1.0})
+        return None
+
+    # Range-finder: dS ~= Q (dS Q)^T (dS symmetric).  Zero drift (identical
+    # snapshot) short-circuits to an empty-correction operator via rank-0
+    # factors -- the truncation below handles the degenerate SVD fine.
+    q, _ = np.linalg.qr(dy.astype(np.float64))
+    q = q.astype(np.float32)
+    w0 = s_new(q) - ps.mm(t_lv[0], q)  # dS Q
+    u_t, v_t = truncate_factors(q, w0, r)  # dT_0 = dS ~= u_t v_t^T
+
+    # -- 2. propagate through the squaring recurrence ------------------------
+    e_f, f_f = u_t.copy(), v_t.copy()  # dP_0 = dS (P_0 = I + T_0)
+    for lvl in range(1, base.d_len):
+        # dT_lvl from dT_{lvl-1}: one width-2r pass against base T_{lvl-1}
+        uv = ps.mm(t_lv[lvl - 1], np.concatenate([u_t, v_t], axis=1))
+        tu, tv = uv[:, : u_t.shape[1]], uv[:, u_t.shape[1] :]
+        u2r = np.concatenate([tu, u_t], axis=1)
+        v2r = np.concatenate([v_t, tv + v_t @ (u_t.T @ v_t)], axis=1)
+        ut_new, vt_new = truncate_factors(u2r, v2r, r)
+        # dP_lvl: P_{lvl-1} @ Ut (P_0 applied implicitly as I + T_0)
+        if lvl == 1:
+            pu = ut_new + ps.mm(t_lv[0], ut_new)
+        else:
+            pu = ps.mm(p_lv[lvl - 2], ut_new)
+        tf = ps.mm(t_lv[lvl], f_f)  # T_lvl @ F
+        e2r = np.concatenate([e_f, pu + e_f @ (f_f.T @ ut_new)], axis=1)
+        f2r = np.concatenate([f_f + tf, vt_new], axis=1)
+        e_f, f_f = truncate_factors(e2r, f2r, r)
+        u_t, v_t = ut_new, vt_new
+
+    # -- 3. corrected P1 (exact): diag(s) P1 diag(s) + E~ F~^T ---------------
+    p1_scale = (sqrt_b * inv_sqrt_n).astype(np.float32)
+    u1 = (inv_sqrt_n[:, None] * e_f).astype(np.float32)
+    v1 = (inv_sqrt_n[:, None] * f_f).astype(np.float32)
+
+    def p1_corr(x: np.ndarray) -> np.ndarray:
+        """P1' x through the base P1 plus the exact correction."""
+        y = p1_scale[:, None] * ps.mm(
+            base.op.p1, (p1_scale[:, None] * x).astype(np.float32)
+        )
+        return (y + u1 @ (v1.T @ x)).astype(np.float32)
+
+    def l_new(x: np.ndarray) -> np.ndarray:
+        """L' x = deg' . x - A' x from the raw snapshot."""
+        return (deg_n[:, None] * x - ps.mm(a, x)).astype(np.float32)
+
+    def l_base(x: np.ndarray) -> np.ndarray:
+        """Base L x reconstructed from retained T_0 (no base adjacency kept):
+        A = D^{1/2} (T_0 [+ u u^T]) D^{1/2} with u = sqrt(deg / V_G)."""
+        ax = sqrt_b[:, None] * ps.mm(t_lv[0], (sqrt_b[:, None] * x).astype(np.float32))
+        if base.deflate:
+            du = deg_b / max(np.sqrt(max(vol_b, 1e-30)), 1e-30)  # sqrt(d) . u
+            ax = ax + du[:, None] * (du @ x)
+        return (deg_b[:, None] * x - ax).astype(np.float32)
+
+    # -- 4. dP2 = P1' L' - P1 L via a two-pass range-finder ------------------
+    omega2 = _rademacher_omega(n, m, cfg.seed + 0xD2)
+    fwd = p1_corr(l_new(omega2)) - ps.mm(base.op.p2, omega2)
+    q2, _ = np.linalg.qr(fwd.astype(np.float64))
+    q2 = q2.astype(np.float32)
+    # adjoint on Q: dP2^T q = L'(P1' q) - L(P1 q); the two base-P1 products
+    # share one width-2m pass over P1.
+    both = ps.mm(
+        base.op.p1, np.concatenate([p1_scale[:, None] * q2, q2], axis=1)
+    )
+    p1q_scaled, p1q = both[:, : q2.shape[1]], both[:, q2.shape[1] :]
+    p1c_q = p1_scale[:, None] * p1q_scaled + u1 @ (v1.T @ q2)
+    v2_full = l_new(p1c_q) - l_base(p1q)
+    u2, v2 = truncate_factors(q2, v2_full, r)
+
+    _OBS_REGISTRY.add_named({
+        "chain.incremental_updates": 1.0,
+        "chain.gemm_flops": ledger.flops,
+        "chain.gemm_bytes": ledger.bytes,
+        "chain.scratch_bytes": ledger.scratch,
+        "chain.delta_gemm_flops": ledger.flops,
+        "chain.delta_gemm_bytes": ledger.bytes,
+    })
+
+    rb = ctx.sharding(ctx.rowblock_spec)
+    return ChainOperator(
+        p1=base.op.p1,
+        p2=base.op.p2,
+        deg=deg_new,
+        vol=vol_new,
+        prefetch_depth=base.op.prefetch_depth,
+        # Keep the base interval bound: corrected spectra move by O(||dS||)
+        # and both Chebyshev (Manteuffel adaptation, PR 8) and CG are robust
+        # to a slightly stale rho; re-measuring would cost power iterations
+        # per transition, defeating the delta path's point.
+        rho=base.op.rho,
+        use_gemm_kernel=base.op.use_gemm_kernel,
+        p1_scale=jax.device_put(
+            jnp.asarray(p1_scale), ctx.sharding(jax.sharding.PartitionSpec(None))
+        ),
+        u1=jax.device_put(jnp.asarray(u1), rb),
+        v1=jax.device_put(jnp.asarray(v1), rb),
+        u2=jax.device_put(jnp.asarray(u2), rb),
+        v2=jax.device_put(jnp.asarray(v2), rb),
+        shared_base=True,
+    )

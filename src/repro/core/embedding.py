@@ -73,6 +73,19 @@ class CommuteConfig:
     # converge in far fewer iterations.  Scores stay allclose to cold solves
     # (same tolerance, same stopping metric); only the iteration count drops.
     warm_start: bool = False
+    # Incremental delta-chain updates (repro.core.delta_chain): on a
+    # slowly-drifting transition, skip the O(n^3) chain rebuild -- compress
+    # the change in S to a rank-`delta_rank` factorisation, propagate it
+    # through the squaring recurrence as skinny panel GEMMs against the
+    # retained base chain (O(n^2 r) per level), and attach the result to the
+    # operator as a low-rank correction every solve applies.  `delta_budget`
+    # is the drift gate: the sketched relative drift ||dS|| / ||S|| (always
+    # measured against the last *full-rebuild* base, so corrections never
+    # compound error) above which the detector falls back to a full rebuild
+    # and collapses the accumulated correction into a fresh base.
+    incremental_chain: bool = False
+    delta_rank: int = 4
+    delta_budget: float = 0.1
 
     def k_rp(self, n: int) -> int:
         if self.k_override is not None:

@@ -40,8 +40,10 @@ import numpy as np
 
 from repro.core import chain
 from repro.core.cad import CADResult, node_anomaly_scores, top_anomalies
+from repro.core.delta_chain import BaseChain, build_base_chain, try_delta_update
 from repro.core.distmatrix import DistContext
 from repro.core.embedding import CommuteConfig, Embedding, commute_time_embedding
+from repro.obs import phase
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import REGISTRY as _OBS_REGISTRY
 
@@ -92,6 +94,7 @@ class SequenceDetector:
         self.use_kernel = use_kernel
         self.donate = donate
         self._prev: tuple[jax.Array, Embedding] | None = None
+        self._base: BaseChain | None = None  # incremental-chain base (cfg.incremental_chain)
         self._t = 0  # snapshots consumed
         self._transitions: list[CADResult] = []
         self._seconds: list[float] = []
@@ -146,10 +149,17 @@ class SequenceDetector:
         snapshot again.
         """
         if emb.op is not None:
-            emb.op.release_scratch()
+            emb.op.release_scratch()  # no-op when the op shares the base chain
         if not self.donate:
             return
-        for buf in (a, emb.z, *(() if emb.op is None else (emb.op.p1, emb.op.p2))):
+        shared = emb.op is not None and getattr(emb.op, "shared_base", False)
+        for buf in (
+            a, emb.z,
+            # A shared-base op's P1/P2 *are* the retained base chain's arrays
+            # (possibly still serving later incremental transitions): never
+            # donate-delete them here -- BaseChain.release() owns that.
+            *(() if emb.op is None or shared else (emb.op.p1, emb.op.p2)),
+        ):
             delete = getattr(buf, "delete", None)
             if delete is None:
                 continue  # store-backed handle: the user's data, not ours
@@ -165,6 +175,37 @@ class SequenceDetector:
                     RuntimeWarning,
                     stacklevel=2,
                 )
+
+    def _incremental_op(self, a):
+        """The chain operator for snapshot ``a`` under incremental mode.
+
+        Tries a low-rank delta update against the retained base chain
+        (:func:`repro.core.delta_chain.try_delta_update`); when the drift
+        monitor rejects the transition -- or there is no base yet -- the
+        accumulated correction collapses into a fresh full build that becomes
+        the new base.  Timing lands under the same ``phase("chain")`` counter
+        the full-build path uses, so per-transition chain seconds stay
+        comparable across modes.
+        """
+        with phase(
+            "chain", n=int(a.shape[0]), d=self.cfg.d, oocore=self.cfg.oocore,
+            incremental=True,
+        ) as sp:
+            if self._base is not None:
+                op = try_delta_update(self.ctx, self._base, a, self.cfg)
+                if op is not None:
+                    sp.annotate(mode="delta")
+                    return op
+                # drift over budget: retire the base before rebuilding
+                self._base.release()
+                self._base = None
+            self._base = build_base_chain(
+                self.ctx, a, self.cfg, use_kernel=self.use_kernel
+            )
+            sp.annotate(mode="rebuild")
+            op = self._base.op
+            sp.fence(op.vol)
+        return op
 
     def push(self, a) -> CADResult | None:
         """Consume snapshot t; returns the CADResult for transition (t-1, t).
@@ -186,8 +227,9 @@ class SequenceDetector:
                 if (self.cfg.warm_start and self._prev is not None)
                 else None
             )
+            op_in = self._incremental_op(a) if self.cfg.incremental_chain else None
             emb = commute_time_embedding(
-                self.ctx, a, self.cfg, use_kernel=self.use_kernel,
+                self.ctx, a, self.cfg, op=op_in, use_kernel=self.use_kernel,
                 warm_from=warm_from,
             )
             out = None
@@ -232,6 +274,13 @@ class SequenceDetector:
                 "finalize() on an empty sequence: 0 snapshots were pushed "
                 "(scoring transitions needs at least 2)"
             )
+        if self._base is not None:
+            # Retire the incremental base chain: drops the retained T/P level
+            # snapshots from the scratch store (and the scratch itself).  The
+            # final embedding's z/scores are already materialized; only the
+            # operator's scratch handles die here.
+            self._base.release()
+            self._base = None
         if not self._transitions:  # T == 1: nothing to score, not an error
             return SequenceResult(
                 transitions=[],

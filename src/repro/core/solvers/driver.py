@@ -185,15 +185,29 @@ def _unrotate_hist(hist: np.ndarray, iters: int) -> list[float]:
 # ---------------------------------------------------------------------------
 
 
-def _resident_program(ctx: DistContext, method: str, deflate: bool, chi):
+def _resident_program(ctx: DistContext, method: str, deflate: bool, chi,
+                      corr_rank: int | None = None):
     """The jitted adaptive loop.  Stopping operands (tol, max_steps, rho) and
     the warm-start iterate y0 are traced, so one compiled program serves
-    every tolerance/cap/rho and both cold (y0 = chi) and warm starts."""
+    every tolerance/cap/rho and both cold (y0 = chi) and warm starts.
+
+    ``corr_rank`` selects the delta-corrected variant: the incremental
+    low-rank factors (u2, v2) become *operands* of the same while_loop
+    program (P2' y = P2 y + u2 (v2^T y)), so a steady-state incremental
+    sequence compiles the corrected program once per correction rank and
+    every later corrected push is a cache hit.  Uncorrected solves keep the
+    historical program (and its bitwise behaviour) untouched.
+    """
 
     def build():
-        def matvec(p2, y):
+        def matvec(p2, y, u2, v2):
             # identical op sequence to matmul_rowblock's resident branch
             out = jnp.dot(p2, y.astype(jnp.float32), preferred_element_type=jnp.float32)
+            if corr_rank is not None:
+                out = out + jnp.dot(
+                    u2, jnp.dot(v2.T, y.astype(jnp.float32)),
+                    preferred_element_type=jnp.float32,
+                )
             return ctx.constrain(out.astype(y.dtype), ctx.rowblock_spec)
 
         def metric_deflate(delta):
@@ -207,7 +221,7 @@ def _resident_program(ctx: DistContext, method: str, deflate: bool, chi):
                 )
             return delta
 
-        def run(p2, chi, y0, tol, max_steps, rho):
+        def run(p2, u2, v2, chi, y0, tol, max_steps, rho):
             den = jnp.maximum(_frob(chi), 1e-30)
 
             def cond(carry):
@@ -218,7 +232,7 @@ def _resident_program(ctx: DistContext, method: str, deflate: bool, chi):
                 y, y_prev, k, kr, res_anchor, p_prev, rho_c, hist, _ = carry
                 gamma = 2.0 / (2.0 - rho_c)
                 sigma2 = (rho_c / (2.0 - rho_c)) ** 2
-                gy = y - matvec(p2, y) + chi  # G y + chi; gy - y is the residual
+                gy = y - matvec(p2, y, u2, v2) + chi  # G y + chi; gy - y is the residual
                 if method == "richardson":
                     y_new, p_new = gy, p_prev
                 else:
@@ -273,7 +287,7 @@ def _resident_program(ctx: DistContext, method: str, deflate: bool, chi):
             y, _, k, _, _, _, rho_c, hist, res = lax.while_loop(cond, body, init)
             return y, k, res, hist, rho_c
 
-        def run_cg(p2, chi, y0, w, tol, max_steps):
+        def run_cg(p2, u2, v2, chi, y0, w, tol, max_steps):
             den = jnp.maximum(_frob(chi), 1e-30)
             wcol = jnp.maximum(w.astype(jnp.float32), 0.0).reshape(-1, 1)
             wsum = jnp.maximum(jnp.sum(wcol), 1e-30)
@@ -287,7 +301,7 @@ def _resident_program(ctx: DistContext, method: str, deflate: bool, chi):
                 return x - jnp.sum(wcol * x, axis=0, keepdims=True) / wsum
 
             r0 = chi.astype(jnp.float32) - matvec(
-                p2, y0.astype(jnp.float32)
+                p2, y0.astype(jnp.float32), u2, v2
             ).astype(jnp.float32)
             if deflate:
                 r0 = dproj(r0)
@@ -299,7 +313,7 @@ def _resident_program(ctx: DistContext, method: str, deflate: bool, chi):
 
             def body(carry):
                 y, r, p, rz, k, _, hist = carry
-                q = matvec(p2, p)
+                q = matvec(p2, p, u2, v2)
                 if deflate:
                     q = ctx.constrain(dproj(q), ctx.rowblock_spec)
                 pq = wdot(p, q)
@@ -332,7 +346,7 @@ def _resident_program(ctx: DistContext, method: str, deflate: bool, chi):
 
     key = (
         "solve_driver", method, ctx, deflate, tuple(chi.shape),
-        np.dtype(chi.dtype).name, RES_HIST_CAP,
+        np.dtype(chi.dtype).name, RES_HIST_CAP, corr_rank,
     )
     return cached_program(key, build)
 
@@ -470,7 +484,7 @@ def _kernel_stream_pass(ctx, handle, y, chi, *, depth, fused):
 
 def _solve_streamed(
     ctx, p2_handle, chi, y0, method, deflate, tol, max_steps, rho,
-    solver_batch, prefetch_depth, use_kernel=False, w=None,
+    solver_batch, prefetch_depth, use_kernel=False, w=None, u2=None, v2=None,
 ):
     p2, cached = p2_handle, None
     if solver_batch > 1 and is_streamable(p2_handle):
@@ -481,8 +495,17 @@ def _solve_streamed(
     n_rows = int(chi.shape[0])
     passes = 0
 
+    def low_rank(x):
+        """The delta correction u2 (v2^T x): device-resident factors, eager
+        skinny products -- never touches the panel stream."""
+        return jnp.dot(
+            u2, jnp.dot(v2.T, x.astype(jnp.float32)),
+            preferred_element_type=jnp.float32,
+        )
+
     def stream_matvec(x):
-        """One plain P2 @ x pass over the stream (kernel path when enabled)."""
+        """One P2' @ x pass over the stream (kernel path when enabled): the
+        base stream plus the rank-r correction epilogue when present."""
         nonlocal passes
         if cached is not None and passes and passes % solver_batch == 0:
             cached.refresh()  # batch boundary: next pass re-streams the store
@@ -490,10 +513,14 @@ def _solve_streamed(
         if use_kernel:
             mv = _kernel_stream_pass(ctx, p2, x, None, depth=prefetch_depth,
                                      fused=False)
-            return ctx.constrain(mv.astype(jnp.float32), ctx.rowblock_spec)
-        return matmul_rowblock(
-            ctx, p2, x, prefetch_depth=prefetch_depth
-        ).astype(jnp.float32)
+            mv = mv.astype(jnp.float32)
+        else:
+            mv = matmul_rowblock(
+                ctx, p2, x, prefetch_depth=prefetch_depth
+            ).astype(jnp.float32)
+        if u2 is not None:
+            mv = mv + low_rank(x)
+        return ctx.constrain(mv, ctx.rowblock_spec)
 
     def metric(delta):
         if deflate:
@@ -563,6 +590,15 @@ def _solve_streamed(
             gy, cs, ss = _kernel_stream_pass(
                 ctx, p2, y, chi, depth=prefetch_depth, fused=True
             )
+            if u2 is not None:
+                # The fused kernel computed gy and the residual moments for
+                # the *base* P2; fold in the rank-r term and recompute the
+                # moments from delta = gy' - y (= chi - P2' y) -- a cheap
+                # eager epilogue, still one pass over the stream.
+                gy = gy.astype(jnp.float32) - low_rank(y)
+                delta = gy - y.astype(jnp.float32)
+                cs = np.asarray(jnp.sum(delta, axis=0), np.float64)
+                ss = float(jnp.sum(delta * delta))
             gy = ctx.constrain(gy.astype(chi.dtype), ctx.rowblock_spec)
             num2 = ss - float(np.sum(cs * cs)) / n_rows if deflate else ss
             res = math.sqrt(max(num2, 0.0)) / den
@@ -685,6 +721,17 @@ def solve(
             # inner product (exact only for uniform degrees).
             w = jnp.ones((int(b.shape[0]),), jnp.float32)
 
+    # Incremental-chain correction factors (None on a plain base operator).
+    # p1_scale/u1/v1 turn the chi build into the exact corrected
+    # P1' b = s * (P1 (s * b)) + u1 (v1^T b); u2/v2 add the rank-r ΔP2
+    # term to every mat-vec of the iteration.
+    p1_scale = getattr(op, "p1_scale", None)
+    u1 = getattr(op, "u1", None)
+    v1 = getattr(op, "v1", None)
+    u2 = getattr(op, "u2", None)
+    v2 = getattr(op, "v2", None)
+    corr_rank = None if u2 is None else int(u2.shape[1])
+
     streamed = is_streamable(op.p1) or is_streamable(op.p2)
     use_k = bool(
         use_gemm_kernel
@@ -699,13 +746,29 @@ def solve(
         "solve", method=spec.method, streamed=streamed, warm=warm
     ) as sp:
         b = ctx.constrain(b, ctx.rowblock_spec)
+        b_in = b
+        if p1_scale is not None:
+            scale_col = p1_scale.astype(jnp.float32).reshape(-1, 1)
+            b_in = ctx.constrain(
+                (b.astype(jnp.float32) * scale_col).astype(b.dtype),
+                ctx.rowblock_spec,
+            )
         if streamed and use_k and is_streamable(op.p1):
             chi = _kernel_stream_pass(
-                ctx, op.p1, b, None, depth=depth, fused=False
+                ctx, op.p1, b_in, None, depth=depth, fused=False
             )
             chi = ctx.constrain(chi.astype(b.dtype), ctx.rowblock_spec)
         else:
-            chi = matmul_rowblock(ctx, op.p1, b, prefetch_depth=depth)
+            chi = matmul_rowblock(ctx, op.p1, b_in, prefetch_depth=depth)
+        if p1_scale is not None:
+            chi = (
+                chi.astype(jnp.float32) * scale_col
+                + jnp.dot(
+                    u1, jnp.dot(v1.T, b.astype(jnp.float32)),
+                    preferred_element_type=jnp.float32,
+                )
+            ).astype(b.dtype)
+            chi = ctx.constrain(chi, ctx.rowblock_spec)
         if deflate:
             chi = deflate_constant(ctx, chi)
 
@@ -726,21 +789,21 @@ def solve(
             y, iters, res, res_hist, rho_final = _solve_streamed(
                 ctx, op.p2, chi, y_start, spec.method, deflate, tol, max_steps,
                 rho or 0.0, solver_batch, depth,
-                use_kernel=use_k and is_streamable(op.p2), w=w,
+                use_kernel=use_k and is_streamable(op.p2), w=w, u2=u2, v2=v2,
             )
             if spec.method != "chebyshev":
                 rho_final = rho
         else:
-            prog = _resident_program(ctx, spec.method, deflate, chi)
+            prog = _resident_program(ctx, spec.method, deflate, chi, corr_rank)
             if spec.method == "cg":
                 y, k_arr, res_arr, hist_arr = prog(
-                    op.p2, chi, y_start, jnp.asarray(w),
+                    op.p2, u2, v2, chi, y_start, jnp.asarray(w),
                     jnp.float32(tol), jnp.int32(max_steps),
                 )
             else:
                 y, k_arr, res_arr, hist_arr, rho_arr = prog(
-                    op.p2, chi, y_start, jnp.float32(tol), jnp.int32(max_steps),
-                    jnp.float32(rho or 0.0),
+                    op.p2, u2, v2, chi, y_start, jnp.float32(tol),
+                    jnp.int32(max_steps), jnp.float32(rho or 0.0),
                 )
                 if spec.method == "chebyshev":
                     rho_final = float(rho_arr)

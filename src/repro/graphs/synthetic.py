@@ -193,16 +193,25 @@ def gmm_snapshot_sequence(
     noise: float = 0.05,
     inject_p: float = 0.05,
     inject_steps: set[int] | None = None,
+    drift_nodes: int | None = None,
     dtype=jnp.float32,
 ) -> SnapshotSequence:
     """T-snapshot GMM sequence: drifting points + per-step edge injections.
 
-    Snapshot 0 is the clean similarity graph; each later snapshot drifts all
+    Snapshot 0 is the clean similarity graph; each later snapshot drifts
     points by ``noise`` and, at steps in ``inject_steps`` (default: every
     t >= 1), adds a fresh uniform-edge injection R_t.  Ground truth for
     transition (t, t+1) is the inter-cluster injected nodes of the two
     endpoint injections (both the appearance at t+1 and the disappearance of
     step t's edges are anomalous), ranked by combined injected weight.
+
+    ``drift_nodes`` localizes the drift: only that many nodes (a fresh
+    deterministic subset per step) move each transition, the rest stay put.
+    The adjacency then changes only in the movers' rows and columns, so
+    ``dS`` is near-low-rank (~2 x movers + normalization) -- the
+    slowly-drifting regime the incremental delta-chain path
+    (:mod:`repro.core.delta_chain`) is built for.  ``None`` (default) keeps
+    the historical global drift.
     """
     if t_steps < 2:
         raise ValueError("a sequence needs at least 2 snapshots")
@@ -211,7 +220,13 @@ def gmm_snapshot_sequence(
     pts0, comp = gmm_points(n, seed)
     pts_all = [pts0]
     for _ in range(1, t_steps):
-        pts_all.append(pts_all[-1] + noise * rng.normal(size=pts0.shape).astype(np.float32))
+        step = noise * rng.normal(size=pts0.shape).astype(np.float32)
+        if drift_nodes is not None:
+            movers = rng.choice(n, size=min(int(drift_nodes), n), replace=False)
+            mask = np.zeros((n, 1), np.float32)
+            mask[movers] = 1.0
+            step = step * mask
+        pts_all.append(pts_all[-1] + step)
 
     # Per-step injected inter-cluster weight per node (n,) -- small, so truth
     # is precomputed; the n x n injections themselves are regenerated lazily.

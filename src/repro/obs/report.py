@@ -33,7 +33,25 @@ from repro.obs.metrics import MetricsRegistry, registry as _default_registry
 from repro.obs.roofline import streamed_solve_flops, streamed_solve_roofline
 
 RUN_REPORT_KIND = "caddelag_run_report"
-RUN_REPORT_SCHEMA = 1
+# Schema history:
+#   1 -- initial: transitions/totals/cache/pipeline/solver/roofline.
+#   2 -- adds the top-level "chain" section (build vs incremental-update
+#        counters and logical GEMM flops/bytes/scratch) and per-transition
+#        "chain" counter deltas (additive; all new fields default to zero
+#        counters, so a schema-1 consumer reading schema 2 loses nothing).
+RUN_REPORT_SCHEMA = 2
+
+# Chain-phase registry counters surfaced in the report, totals and
+# per-transition (see repro.core.chain / repro.core.delta_chain).
+_CHAIN_FIELDS = (
+    "builds", "full_rebuilds", "incremental_updates", "drift_fallbacks",
+    "gemm_flops", "gemm_bytes", "scratch_bytes",
+    "delta_gemm_flops", "delta_gemm_bytes",
+)
+
+
+def _chain_from_delta(delta: Mapping[str, float]) -> dict[str, float]:
+    return {f: float(delta.get(f"chain.{f}", 0.0)) for f in _CHAIN_FIELDS}
 
 # The per-transition phase vocabulary, in pipeline order.  `phase()` spans and
 # registry counters use exactly these names (phase.<name>.seconds).
@@ -107,6 +125,7 @@ def build_run_report(
             else None,
             "phases": _phases_from_delta(delta),
             "bytes": _bytes_from_delta(delta),
+            "chain": _chain_from_delta(delta),
             "panels": int(delta.get("stream.panels", 0)),
             "solves": solves,
             "top_idx": np.asarray(r.top_idx).tolist(),
@@ -181,6 +200,11 @@ def build_run_report(
         "transitions": transitions,
         "warmup": warmup_rec,
         "totals": totals,
+        "chain": {
+            **_chain_from_delta(c),
+            "drift_last": snap.gauges.get("chain.drift_last"),
+            "drift_series": [float(v) for v in reg.series("chain.drift")],
+        },
         "cache": {
             "hits": hits,
             "misses": misses,
@@ -236,6 +260,16 @@ def validate_run_report(doc: Any) -> None:
     _expect(p, isinstance(doc.get("n_snapshots"), int), "n_snapshots must be int")
     for key in ("totals", "cache", "pipeline", "solver"):
         _expect(p, isinstance(doc.get(key), dict), f"{key} must be an object")
+    if doc.get("schema", 0) >= 2:
+        ch = doc.get("chain")
+        if _expect(p, isinstance(ch, dict), "chain must be an object (schema >= 2)"):
+            for f_ in _CHAIN_FIELDS:
+                _expect(p, _is_num(ch.get(f_, None)) and ch[f_] >= 0,
+                        f"chain.{f_} must be a number >= 0")
+            _expect(p, ch.get("drift_last") is None or _is_num(ch["drift_last"]),
+                    "chain.drift_last must be a number or null")
+            _expect(p, isinstance(ch.get("drift_series"), list),
+                    "chain.drift_series must be a list")
     _expect(p, isinstance(doc.get("warnings"), list), "warnings must be a list")
     trs = doc.get("transitions")
     if _expect(p, isinstance(trs, list) and len(trs) > 0,
@@ -257,6 +291,13 @@ def validate_run_report(doc: Any) -> None:
                 for f_ in _BYTE_FIELDS:
                     _expect(p, isinstance(by.get(f_, None), int) and by[f_] >= 0,
                             f"{where}.bytes.{f_} must be an int >= 0")
+            if doc.get("schema", 0) >= 2:
+                tch = tr.get("chain")
+                if _expect(p, isinstance(tch, dict),
+                           f"{where}.chain must be an object (schema >= 2)"):
+                    for f_ in _CHAIN_FIELDS:
+                        _expect(p, _is_num(tch.get(f_, None)) and tch[f_] >= 0,
+                                f"{where}.chain.{f_} must be a number >= 0")
             solves = tr.get("solves")
             if _expect(p, isinstance(solves, list), f"{where}.solves must be a list"):
                 for j, s in enumerate(solves):

@@ -156,6 +156,41 @@ def test_warm_cg_retrace_budget(ctx1):
     assert st.misses == warm_misses, "tolerance leaked into the CG cache key"
 
 
+def test_incremental_chain_retrace_budget(ctx1):
+    """The delta-chain path keeps the retrace budget: its factor algebra runs
+    eagerly (host QR/SVD + rowblock passes), so the only new compiled program
+    is the corrected resident solve loop -- keyed once by correction rank on
+    the FIRST incremental push.  Steady-state incremental pushes add ZERO
+    traces and ZERO program-cache misses."""
+    from repro.core import CommuteConfig as _Cfg
+
+    cfg = _Cfg(
+        eps_rp=1e-2, d=3, q=3, schedule="xla", k_override=4,
+        solver="cg", solver_tol=1e-4, warm_start=True,
+        incremental_chain=True, delta_rank=4, delta_budget=0.5,
+    )
+    # slowly-drifting snapshots: a0 plus a small symmetric perturbation per
+    # step, so the drift monitor accepts every transition after the base build
+    a0 = _sym(32, 70)
+    snaps = [
+        np.abs(a0 + 2e-3 * t * _sym(32, 71 + t)).astype(np.float32)
+        for t in range(4)
+    ]
+    det = SequenceDetector(ctx1, cfg, top_k=5)
+    det.push(ctx1.put_matrix(snaps[0]))  # full base build
+    det.push(ctx1.put_matrix(snaps[1]))  # first delta: corrected CG compiles
+    st = program_cache_stats()
+    warm_traces, warm_misses = st.traces, st.misses
+    det.push(ctx1.put_matrix(snaps[2]))
+    det.push(ctx1.put_matrix(snaps[3]))
+    res = det.finalize()
+    assert st.traces == warm_traces, "steady-state incremental push retraced"
+    assert st.misses == warm_misses, "steady-state incremental push missed the cache"
+    # sanity: the steady-state pushes really were delta updates, not rebuilds
+    for m in res.transition_metrics[1:]:
+        assert m.get("chain.incremental_updates", 0.0) == 1.0
+
+
 def test_streamed_sequence_retrace_budget(ctx1):
     """The retrace budget holds out-of-core too: store-backed snapshots and
     the oocore chain reuse one compiled program set across the sequence."""

@@ -1,0 +1,273 @@
+"""Incremental delta-chain updates (ISSUE 9): correctness, telemetry, lifecycle.
+
+Covers the acceptance bars end to end:
+
+* combination matrix -- incremental x warm-start x (resident, oocore) x
+  (1x1, 2x2 mesh) -- scores allclose to the full-rebuild path within the
+  documented tolerance (1e-3 of the commute-distance scale ``V_G E||z||^2``;
+  on a quiet drifting sequence the raw scores sit orders of magnitude below
+  that scale, so relative-to-score tolerances would be meaningless),
+* the >= 3x chain-phase GEMM FLOP / scratch-byte reduction, asserted from the
+  registry counters each scored transition records,
+* the drift monitor's fallback on an abrupt-change transition,
+* the shared-base scratch lifecycle (satellite: no leak, no double-free),
+* ``truncate_factors`` optimality (the rank-r recompression the level
+  propagation leans on).
+
+The heavy rank x solver x storage sweep rides behind ``-m slow``.
+"""
+
+import warnings as _warnings
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CommuteConfig,
+    build_base_chain,
+    detect_sequence_anomalies,
+    full_build_gemm_cost,
+    truncate_factors,
+    try_delta_update,
+)
+from repro.core.embedding import commute_time_embedding
+from repro.graphs import gmm_snapshot_sequence
+
+
+@pytest.fixture(params=["ctx1", "ctx22"])
+def ctx(request):
+    return request.getfixturevalue(request.param)
+
+
+# Localized drift (3 movers / step) keeps dS near-low-rank -- the regime the
+# delta path targets; global point noise would make dS full-rank and the
+# drift monitor would (correctly) reject every transition.
+_DRIFT_KW = dict(seed=5, noise=0.02, inject_steps=set(), drift_nodes=3)
+
+_BASE_CFG = CommuteConfig(
+    eps_rp=1e-2, d=3, q=8, schedule="xla", k_override=4,
+    solver="cg", solver_tol=1e-5, warm_start=True,
+)
+_INC_CFG = replace(_BASE_CFG, incremental_chain=True, delta_rank=6, delta_budget=0.1)
+
+
+def _drifting_snapshots(ctx, n, t_steps, storage):
+    """Slowly-drifting localized-movement GMM sequence; oocore variants are
+    served as store-backed handles so the whole transition streams."""
+    seq = gmm_snapshot_sequence(ctx, n, t_steps, **_DRIFT_KW)
+    if storage == "oocore":
+        from repro.store import TileStore
+
+        store = TileStore.create(None, n=n, grid=4)
+        for t, a in enumerate(seq.snapshots()):
+            store.put_snapshot(f"t{t:03d}", np.asarray(a))
+        return store.iter_snapshots()
+    return seq.snapshots()
+
+
+def _commute_scale(ctx, cfg, n, t_steps):
+    """The commute-distance scale V_G * E||z_i||^2 -- the natural atol anchor
+    (same convention as the warm-start acceptance tests)."""
+    seq = gmm_snapshot_sequence(ctx, n, t_steps, **_DRIFT_KW)
+    emb = commute_time_embedding(ctx, next(seq.snapshots()), cfg)
+    z = np.asarray(emb.z, np.float64)
+    return float(emb.vol) * float((z * z).sum(1).mean())
+
+
+def _counter(metrics: dict, name: str) -> float:
+    return float(metrics.get(f"chain.{name}", 0.0))
+
+
+# ---------------------------------------------------------------------------
+# combination matrix: incremental x warm x storage x mesh
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("storage", ["resident", "oocore"])
+def test_incremental_scores_allclose_full_rebuild(ctx, storage):
+    """Acceptance (1x1 AND 2x2 mesh, resident AND out-of-core, warm-started):
+    incremental-chain scores stay allclose (rtol 1e-3, atol 1e-3 of the
+    commute-distance scale) to the full-rebuild run, with every transition
+    after the first push served by a delta update (no fallbacks)."""
+    n, t_steps = 48, 3
+    full_cfg = replace(_BASE_CFG, oocore=storage == "oocore")
+    inc_cfg = replace(_INC_CFG, oocore=storage == "oocore")
+    full = detect_sequence_anomalies(
+        ctx, _drifting_snapshots(ctx, n, t_steps, storage), full_cfg, top_k=5
+    )
+    inc = detect_sequence_anomalies(
+        ctx, _drifting_snapshots(ctx, n, t_steps, storage), inc_cfg, top_k=5
+    )
+    scale = _commute_scale(ctx, replace(full_cfg, oocore=False), n, t_steps)
+    for t, (f, i) in enumerate(zip(full.transitions, inc.transitions)):
+        np.testing.assert_allclose(
+            np.asarray(i.scores), np.asarray(f.scores),
+            rtol=1e-3, atol=1e-3 * scale, err_msg=f"transition {t}",
+        )
+    # the first push was the one full build; everything after was a delta
+    assert _counter(inc.warmup_metrics, "full_rebuilds") == 1
+    assert sum(_counter(m, "incremental_updates") for m in inc.transition_metrics) == t_steps - 1
+    assert sum(_counter(m, "drift_fallbacks") for m in inc.transition_metrics) == 0
+    assert sum(_counter(m, "full_rebuilds") for m in inc.transition_metrics) == 0
+
+
+@pytest.mark.parametrize("method", ["richardson", "chebyshev"])
+def test_incremental_all_solver_methods(ctx1, method):
+    """The low-rank correction rides inside every solver's mat-vec: the
+    non-CG methods match their own full-rebuild runs too (CG is covered by
+    the combination matrix above)."""
+    n, t_steps = 48, 3
+    full_cfg = replace(_BASE_CFG, solver=method, solver_tol=1e-4)
+    inc_cfg = replace(full_cfg, incremental_chain=True, delta_rank=6, delta_budget=0.1)
+    full = detect_sequence_anomalies(
+        ctx1, _drifting_snapshots(ctx1, n, t_steps, "resident"), full_cfg, top_k=5
+    )
+    inc = detect_sequence_anomalies(
+        ctx1, _drifting_snapshots(ctx1, n, t_steps, "resident"), inc_cfg, top_k=5
+    )
+    scale = _commute_scale(ctx1, full_cfg, n, t_steps)
+    for t, (f, i) in enumerate(zip(full.transitions, inc.transitions)):
+        np.testing.assert_allclose(
+            np.asarray(i.scores), np.asarray(f.scores),
+            rtol=1e-3, atol=1e-3 * scale, err_msg=f"{method} transition {t}",
+        )
+    assert sum(_counter(m, "incremental_updates") for m in inc.transition_metrics) == t_steps - 1
+
+
+# ---------------------------------------------------------------------------
+# the >= 3x FLOP / scratch reduction (registry counters)
+# ---------------------------------------------------------------------------
+
+
+def test_incremental_gemm_flops_and_scratch_at_least_3x_less(ctx1):
+    """Acceptance: every incremental transition's chain-phase GEMM FLOPs and
+    materialized scratch bytes (registry counters ``chain.gemm_flops`` /
+    ``chain.scratch_bytes``) are >= 3x below one full rebuild's cost at the
+    benchmark size n=96, d=3, rank 6."""
+    n, t_steps = 96, 3
+    cfg = replace(_INC_CFG, k_override=6)
+    res = detect_sequence_anomalies(
+        ctx1, _drifting_snapshots(ctx1, n, t_steps, "resident"), cfg, top_k=5
+    )
+    full_flops, _, full_scratch = full_build_gemm_cost(n, cfg.d)
+    assert sum(_counter(m, "drift_fallbacks") for m in res.transition_metrics) == 0
+    for t, m in enumerate(res.transition_metrics):
+        assert _counter(m, "incremental_updates") == 1, f"transition {t}"
+        flops = _counter(m, "gemm_flops")
+        scratch = _counter(m, "scratch_bytes")
+        assert 0 < flops <= full_flops / 3.0, (t, flops, full_flops)
+        assert 0 < scratch <= full_scratch / 3.0, (t, scratch, full_scratch)
+
+
+# ---------------------------------------------------------------------------
+# drift monitor: abrupt change falls back to a full rebuild
+# ---------------------------------------------------------------------------
+
+
+def test_drift_monitor_falls_back_on_abrupt_change(ctx1):
+    """A structurally-different snapshot mid-sequence trips the sketched
+    drift monitor: that transition pays one fallback + one full rebuild (and
+    becomes the new base), while the quiet transitions stay incremental."""
+    n = 48
+    quiet = list(gmm_snapshot_sequence(ctx1, n, 3, **_DRIFT_KW).snapshots())
+    abrupt = next(
+        gmm_snapshot_sequence(
+            ctx1, n, 2, seed=99, noise=0.02, inject_steps=set()
+        ).snapshots()
+    )
+    res = detect_sequence_anomalies(ctx1, [*quiet, abrupt], _INC_CFG, top_k=5)
+    # pushes: 0 = rebuild (warmup), 1..2 = delta updates, 3 = fallback+rebuild
+    assert _counter(res.warmup_metrics, "full_rebuilds") == 1
+    per_t = res.transition_metrics
+    assert [_counter(m, "incremental_updates") for m in per_t] == [1, 1, 0]
+    assert [_counter(m, "drift_fallbacks") for m in per_t] == [0, 0, 1]
+    assert [_counter(m, "full_rebuilds") for m in per_t] == [0, 0, 1]
+    for t in res.transitions:
+        assert np.isfinite(np.asarray(t.scores)).all()
+
+
+# ---------------------------------------------------------------------------
+# shared-base scratch lifecycle (satellite: no leak, no double-free)
+# ---------------------------------------------------------------------------
+
+
+def test_shared_base_scratch_lifecycle_oocore(ctx1):
+    """The base chain is the single owner of the out-of-core scratch: a
+    corrected operator's ``release_scratch()`` is a no-op (its P1/P2 *are*
+    the base's handles), ``BaseChain.release()`` empties the scratch store
+    exactly once, and a second release is a clean no-op -- no warning, no
+    double-free."""
+    n = 48
+    cfg = replace(_INC_CFG, oocore=True)
+    snaps = list(gmm_snapshot_sequence(ctx1, n, 2, **_DRIFT_KW).snapshots())
+    base = build_base_chain(ctx1, snaps[0], cfg)
+    store = base.op.p1.store
+    live = set(store.snapshot_ids)
+    # p1 + p2 + d retained T levels + (d-2) retained P levels
+    assert len(live) == 2 + cfg.d + (cfg.d - 2)
+
+    corrected = try_delta_update(ctx1, base, snaps[1], cfg)
+    assert corrected is not None and corrected.shared_base
+    corrected.release_scratch()  # shares the base: must NOT retire scratch
+    assert set(store.snapshot_ids) == live
+
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        base.release()  # the one real release: every retained handle dies
+        assert store.snapshot_ids == []
+        base.release()  # idempotent: no second remove, no warning
+
+
+# ---------------------------------------------------------------------------
+# factor truncation: exact best-rank-r recompression
+# ---------------------------------------------------------------------------
+
+
+def test_truncate_factors_is_optimal_rank_r():
+    """``truncate_factors(u, v, r)`` matches the optimal (SVD) rank-r
+    approximation of u v^T: the residual equals the singular-value tail."""
+    rng = np.random.default_rng(0)
+    u = rng.normal(size=(40, 6)).astype(np.float32)
+    v = rng.normal(size=(40, 6)).astype(np.float32)
+    prod = u.astype(np.float64) @ v.astype(np.float64).T
+    s = np.linalg.svd(prod, compute_uv=False)
+    for r in (2, 4, 6):
+        ut, vt = truncate_factors(u, v, r)
+        assert ut.shape == (40, r) and vt.shape == (40, r)
+        err = np.linalg.norm(prod - ut.astype(np.float64) @ vt.astype(np.float64).T)
+        opt = np.linalg.norm(s[r:])
+        np.testing.assert_allclose(err, opt, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# heavy sweep: rank x storage x mesh (slow marker)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("storage", ["resident", "oocore"])
+@pytest.mark.parametrize("rank", [4, 8])
+def test_incremental_sweep_rank_storage_mesh(ctx, rank, storage):
+    """Heavy combination sweep: delta rank x storage x mesh at n=96, T=4,
+    warm-started CG -- scores allclose to full rebuild, zero fallbacks."""
+    n, t_steps = 96, 4
+    full_cfg = replace(_BASE_CFG, k_override=6, oocore=storage == "oocore")
+    inc_cfg = replace(
+        full_cfg, incremental_chain=True, delta_rank=rank, delta_budget=0.1
+    )
+    full = detect_sequence_anomalies(
+        ctx, _drifting_snapshots(ctx, n, t_steps, storage), full_cfg, top_k=5
+    )
+    inc = detect_sequence_anomalies(
+        ctx, _drifting_snapshots(ctx, n, t_steps, storage), inc_cfg, top_k=5
+    )
+    scale = _commute_scale(ctx, replace(full_cfg, oocore=False), n, t_steps)
+    for t, (f, i) in enumerate(zip(full.transitions, inc.transitions)):
+        np.testing.assert_allclose(
+            np.asarray(i.scores), np.asarray(f.scores),
+            rtol=1e-3, atol=1e-3 * scale,
+            err_msg=f"rank={rank} {storage} transition {t}",
+        )
+    assert sum(_counter(m, "incremental_updates") for m in inc.transition_metrics) == t_steps - 1
+    assert sum(_counter(m, "drift_fallbacks") for m in inc.transition_metrics) == 0
