@@ -1,0 +1,240 @@
+"""Query-path benchmarks: artifact-read latency, residency, and scorer AUC.
+
+``speedup`` -- the ISSUE 10 acceptance bar: answering "top-k most anomalous
+nodes now" from a persisted :class:`~repro.store.embstore.EmbeddingStore`
+artifact must be >= 10x faster (n >= 512) than re-deriving the same answer
+through the write path (chain build + edge projection + solve).  The read
+path streams the (n, k_RP) sketch in row panels through the fused
+distance/top-k kernel -- O(n k_RP) work against the write path's O(n^3)
+GEMMs -- so the gap should widen with n.  Both paths run after untimed
+warm-up (shared compile cache); asserted, not just reported.
+
+Also asserted here: the query is *panel-bounded* -- the streaming
+executors' ``peak_live_bytes`` gauge stays within 2 staged panels of the
+one streamed operand (prefetch depth x one Z panel), independent of n.
+
+``auc`` -- scorer quality on the labeled degenerate-regime fixture
+(:func:`repro.graphs.gmm_snapshot_sequence` with ``anomaly_nodes`` +
+``dim_nodes``): a planted satellite clump (structural anomalies, labeled 1)
+plus degree-dimmed distractors at normal positions (labeled 0).  The
+sketch-based scorers must land within 0.02 ROC-AUC of the O(n^3)
+eigendecomposition oracle (:func:`exact_commute_distances`), and the von
+Luxburg corrected scorer must do no worse than the raw one on this fixture
+-- raw commute distance rewards the distractors' 1/deg term, the corrected
+score subtracts exactly that.
+
+``trajectory`` -- the weekly ``BENCH_query.json`` artifact: both sections
+under a stable schema, diffable week over week.
+
+  PYTHONPATH=src python benchmarks/bench_query.py
+  PYTHONPATH=src python benchmarks/bench_query.py --trajectory BENCH_query.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.core import CommuteConfig, SequenceDetector, trivial_context
+from repro.core.embedding import commute_time_embedding, exact_commute_distances
+from repro.core.query import rank_auc, top_anomalies_from_store
+from repro.core.tiles import reset_stream_stats, stream_stats
+from repro.graphs import gmm_snapshot_sequence
+from repro.store.embstore import EmbeddingStore
+
+
+def _write_path_score(ctx, a, cfg, top_k):
+    """The full re-derivation a query replaces: chain + project + solve +
+    centroid score.  Returns the top-k node ids (for sanity checks)."""
+    emb = commute_time_embedding(ctx, a, cfg)
+    z = np.asarray(emb.z, np.float64)
+    scores = float(emb.vol) * ((z - z.mean(0)) ** 2).sum(1)
+    return np.argsort(-scores)[:top_k]
+
+
+def speedup(n=512, top_k=10, codec="raw", repeats=5, out=print):
+    """Artifact query vs full-pipeline re-score at the same n; >= 10x bar."""
+    ctx = trivial_context()
+    cfg = CommuteConfig(eps_rp=1e-2, d=6, q=8, schedule="xla")
+    seq = gmm_snapshot_sequence(ctx, n, 2, seed=0, inject_p=0.02)
+    snaps = list(seq.snapshots())
+    a = snaps[-1]
+
+    with tempfile.TemporaryDirectory() as root:
+        store = EmbeddingStore.create(
+            root, n=n, k=cfg.k_rp(n), codec=codec, seed=cfg.seed
+        )
+        det = SequenceDetector(ctx, cfg, emb_store=store)
+        for s in snaps:
+            det.push(s)  # write path: artifacts published as a side effect
+
+        # untimed warm-up on both sides (shared XLA / Pallas compile cache)
+        top_anomalies_from_store(store, top_k)
+        _write_path_score(ctx, a, cfg, top_k)
+
+        reset_stream_stats()
+        q_times, res = [], None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            res = top_anomalies_from_store(store, top_k)
+            q_times.append(time.perf_counter() - t0)
+        st = stream_stats()
+        panel_bytes = store.manifest.panel_rows * store.manifest.k * (
+            2 if codec == "bf16" else 4
+        )
+        peak = st.peak_live_bytes
+
+        r_times = []
+        for _ in range(max(2, repeats // 2)):
+            t0 = time.perf_counter()
+            rebuilt = _write_path_score(ctx, a, cfg, top_k)
+            r_times.append(time.perf_counter() - t0)
+
+        q_ms, r_ms = 1e3 * min(q_times), 1e3 * min(r_times)
+        ratio = r_ms / q_ms
+        overlap = len(set(res.idx.tolist()) & set(rebuilt.tolist()))
+        out(
+            f"[bench_query] n={n} codec={codec}: query {q_ms:.1f} ms vs "
+            f"re-score {r_ms:.1f} ms -> {ratio:.1f}x "
+            f"(panels={res.panels} bytes_read={res.bytes_read} "
+            f"top-{top_k} overlap {overlap}/{top_k})"
+        )
+        out(
+            f"[bench_query] residency: peak_live_bytes={peak} "
+            f"<= 2 x panel ({2 * panel_bytes}) -> "
+            f"{'OK' if peak <= 2 * panel_bytes else 'OVER'}"
+        )
+        assert n < 512 or ratio >= 10.0, (
+            f"query path only {ratio:.1f}x faster than re-score at n={n} "
+            f"(bar: 10x at n >= 512)"
+        )
+        assert peak <= 2 * panel_bytes, (
+            f"query not panel-bounded: peak_live_bytes={peak} > "
+            f"2 x panel_bytes={2 * panel_bytes}"
+        )
+        return {
+            "n": n,
+            "codec": codec,
+            "query_ms": q_ms,
+            "rescore_ms": r_ms,
+            "ratio": ratio,
+            "panels": res.panels,
+            "bytes_read": res.bytes_read,
+            "peak_live_bytes": peak,
+            "panel_bytes": panel_bytes,
+            "topk_overlap": overlap,
+            "pass": bool((n < 512 or ratio >= 10.0) and peak <= 2 * panel_bytes),
+        }
+
+
+def auc(n=256, n_anom=8, n_dim=24, out=print):
+    """Scorer ROC-AUC vs the exact oracle on the degenerate-regime fixture."""
+    ctx = trivial_context()
+    cfg = CommuteConfig(k_override=64, d=8, q=12, seed=0)
+    seq = gmm_snapshot_sequence(
+        ctx, n, 2, seed=0, anomaly_nodes=n_anom, dim_nodes=n_dim,
+        inject_steps=set(),
+    )
+    labels = seq.labels
+    a0 = None
+    with tempfile.TemporaryDirectory() as root:
+        store = EmbeddingStore.create(root, n=n, k=64, seed=0)
+        det = SequenceDetector(ctx, cfg, emb_store=store)
+        for t, s in enumerate(seq.snapshots()):
+            if t == 0:
+                a0 = np.asarray(s, np.float64)
+            det.push(s)
+
+        c = np.asarray(exact_commute_distances(a0), np.float64)
+        deg = a0.sum(1)
+        vol = deg.sum()
+        exact_raw = c.mean(1)
+        exact_corr = (c / vol - (1 / deg)[:, None] - (1 / deg)[None, :]).mean(1)
+
+        handle = store.embedding("t0000")
+        s_raw = np.empty(n)
+        s_corr = np.empty(n)
+        r = top_anomalies_from_store(handle, n)
+        s_raw[r.idx] = r.val
+        r = top_anomalies_from_store(handle, n, corrected=True)
+        s_corr[r.idx] = r.val
+
+    res = {
+        "n": n,
+        "anomaly_nodes": n_anom,
+        "dim_nodes": n_dim,
+        "auc_exact_raw": rank_auc(labels, exact_raw),
+        "auc_exact_corrected": rank_auc(labels, exact_corr),
+        "auc_approx_raw": rank_auc(labels, s_raw),
+        "auc_approx_corrected": rank_auc(labels, s_corr),
+    }
+    gap_raw = abs(res["auc_approx_raw"] - res["auc_exact_raw"])
+    gap_corr = abs(res["auc_approx_corrected"] - res["auc_exact_corrected"])
+    corr_wins = res["auc_approx_corrected"] >= res["auc_approx_raw"]
+    out(
+        f"[bench_query] auc n={n} (+{n_anom} planted, {n_dim} dimmed): "
+        f"raw exact {res['auc_exact_raw']:.3f} approx "
+        f"{res['auc_approx_raw']:.3f}; corrected exact "
+        f"{res['auc_exact_corrected']:.3f} approx "
+        f"{res['auc_approx_corrected']:.3f}"
+    )
+    assert gap_raw <= 0.02 and gap_corr <= 0.02, (
+        f"approximate scorer drifted from the exact oracle: "
+        f"raw gap {gap_raw:.3f}, corrected gap {gap_corr:.3f} (bar: 0.02)"
+    )
+    assert corr_wins, (
+        f"corrected scorer below raw on the degenerate fixture: "
+        f"{res['auc_approx_corrected']:.3f} < {res['auc_approx_raw']:.3f}"
+    )
+    res["pass"] = bool(gap_raw <= 0.02 and gap_corr <= 0.02 and corr_wins)
+    return res
+
+
+def trajectory(out_path, out=print):
+    """Canonical perf-trajectory artifact (``BENCH_query.json``), schema 1:
+    the >= 10x latency section (raw and bf16 artifacts) plus the scorer-AUC
+    section, so both query-latency and scorer-quality regressions show up in
+    the weekly artifact diff."""
+    sp = {c: speedup(codec=c, out=out) for c in ("raw", "bf16")}
+    auc_res = auc(out=out)
+    result = {
+        "bench": "query_trajectory",
+        "schema": 1,
+        "speedup": sp,
+        "auc": auc_res,
+        "all_pass": all(s["pass"] for s in sp.values()) and auc_res["pass"],
+    }
+    Path(out_path).write_text(json.dumps(result, indent=2))
+    out(f"[bench_query] trajectory: all_pass={result['all_pass']}; wrote {out_path}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=512)
+    ap.add_argument("--top-k", type=int, default=10)
+    ap.add_argument("--codec", default="raw", choices=("raw", "bf16"))
+    ap.add_argument("--speedup", action="store_true",
+                    help="only the >= 10x latency + residency section")
+    ap.add_argument("--auc", action="store_true",
+                    help="only the scorer ROC-AUC section")
+    ap.add_argument("--trajectory", default=None, metavar="PATH",
+                    help="write the BENCH_query.json artifact and exit")
+    args = ap.parse_args()
+    if args.trajectory:
+        trajectory(args.trajectory)
+        return
+    if args.speedup or not args.auc:
+        speedup(n=args.n, top_k=args.top_k, codec=args.codec)
+    if args.auc or not args.speedup:
+        auc()
+
+
+if __name__ == "__main__":
+    main()

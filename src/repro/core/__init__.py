@@ -33,6 +33,14 @@ from repro.core.embedding import (
     commute_time_embedding,
     edge_projection,
     exact_commute_distances,
+    validate_node_indices,
+)
+from repro.core.query import (
+    QueryResult,
+    commute_block,
+    nearest_neighbors,
+    rank_auc,
+    top_anomalies_from_store,
 )
 from repro.core.sequence import SequenceDetector, SequenceResult, detect_sequence_anomalies
 from repro.core.solver import estimate_solution, residual_norm
@@ -89,6 +97,12 @@ __all__ = [
     "matmul",
     "matmul_rowblock",
     "node_anomaly_scores",
+    "QueryResult",
+    "commute_block",
+    "nearest_neighbors",
+    "rank_auc",
+    "top_anomalies_from_store",
+    "validate_node_indices",
     "reset_chain_build_count",
     "reset_stream_stats",
     "residual_norm",

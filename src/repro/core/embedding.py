@@ -14,6 +14,7 @@ hashes.  One pass over A per batch of k_RP columns, zero stored randomness.
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass
 
 import jax
@@ -26,7 +27,7 @@ from repro.core.chain import ChainOperator, chain_product
 from repro.core.distmatrix import DistContext
 from repro.core.solvers import SolveReport, SolverSpec, solve
 from repro.core.tiles import is_streamable, tile_map, tile_stream
-from repro.obs import phase
+from repro.obs import REGISTRY, phase
 
 
 @dataclass(frozen=True)
@@ -210,8 +211,21 @@ def commute_time_embedding(
         )
         sp.fence(y)
     y0 = None
-    if warm_from is not None and tuple(warm_from.shape) == (int(n), int(k)):
-        y0 = warm_from
+    if warm_from is not None:
+        if tuple(warm_from.shape) == (int(n), int(k)):
+            y0 = warm_from
+        else:
+            # A silent cold start here used to be invisible: the sequence kept
+            # converging, just slowly.  Count it and warn so a mid-stream k_RP
+            # (or n) change shows up in run reports and test output.
+            REGISTRY.inc("solve.warm_skipped")
+            warnings.warn(
+                f"warm_from shape {tuple(warm_from.shape)} does not match the "
+                f"expected ({int(n)}, {int(k)}); solving cold (counted in "
+                "solve.warm_skipped)",
+                RuntimeWarning,
+                stacklevel=2,
+            )
     with phase("solve", n=n, k=k, method=cfg.solver, warm=y0 is not None) as sp:
         z, report = solve(
             ctx,
@@ -228,10 +242,37 @@ def commute_time_embedding(
     return Embedding(z=z, vol=op.vol, op=op, report=report)
 
 
+def validate_node_indices(name: str, idx, n: int) -> None:
+    """Raise ``IndexError`` naming the first bad index when any of ``idx``
+    falls outside ``[0, n)``.
+
+    jax's gather silently *clamps* out-of-range indices, so ``z[rows]`` with
+    a bad row returns the edge row's distances -- a plausible-looking, wrong
+    answer.  Validation only applies to concrete indices; traced indices
+    (inside jit) cannot be checked at trace time and pass through.
+    """
+    try:
+        arr = np.asarray(idx)
+    except Exception:
+        return  # traced: concrete values unavailable at trace time
+    if arr.size == 0:
+        return
+    bad = (arr < 0) | (arr >= n)
+    if bad.any():
+        first = int(arr[bad][0] if arr.ndim else arr)
+        raise IndexError(
+            f"{name} index {first} is out of range for n={n} "
+            "(valid node ids are 0..n-1; jax would silently clamp it)"
+        )
+
+
 def commute_distance_block(
     emb: Embedding, rows: jax.Array, cols: jax.Array
 ) -> jax.Array:
     """c(i, j) = V_G ||Z_i - Z_j||^2 for an index block (gathered Z rows)."""
+    n = int(emb.z.shape[0])
+    validate_node_indices("rows", rows, n)
+    validate_node_indices("cols", cols, n)
     zi = emb.z[rows].astype(jnp.float32)
     zj = emb.z[cols].astype(jnp.float32)
     sq_i = jnp.sum(zi * zi, axis=-1)

@@ -87,12 +87,18 @@ class SequenceDetector:
         top_k: int = 10,
         use_kernel: bool = False,
         donate: bool = False,
+        emb_store=None,
     ):
         self.ctx = ctx
         self.cfg = cfg or CommuteConfig()
         self.top_k = top_k
         self.use_kernel = use_kernel
         self.donate = donate
+        # Write/read split: with an EmbeddingStore attached, every push
+        # publishes the committed (z, vol, deg, zbar) artifact so query-path
+        # readers (repro.core.query) never touch live solver state.  Duck-
+        # typed (put_embedding), so the core keeps zero store imports.
+        self.emb_store = emb_store
         self._prev: tuple[jax.Array, Embedding] | None = None
         self._base: BaseChain | None = None  # incremental-chain base (cfg.incremental_chain)
         self._t = 0  # snapshots consumed
@@ -207,6 +213,23 @@ class SequenceDetector:
             sp.fence(op.vol)
         return op
 
+    def _publish(self, emb: Embedding) -> None:
+        """Publish snapshot t's committed embedding to the attached store.
+
+        The artifact is a host-side *copy* of (z, vol, deg) -- readers never
+        alias live device buffers, so ``donate=True`` double-buffering and
+        in-flight solves can't tear a query.  Atomic panel writes +
+        commit-on-complete (see :class:`repro.store.embstore.EmbeddingStore`)
+        mean a crash mid-publish leaves the previous artifact current.
+        """
+        with phase("publish", t=self._t, n=int(emb.z.shape[0])):
+            self.emb_store.put_embedding(
+                f"t{self._t:04d}",
+                np.asarray(emb.z),
+                float(np.asarray(emb.vol)),
+                np.asarray(emb.op.deg),
+            )
+
     def push(self, a) -> CADResult | None:
         """Consume snapshot t; returns the CADResult for transition (t-1, t).
 
@@ -232,6 +255,8 @@ class SequenceDetector:
                 self.ctx, a, self.cfg, op=op_in, use_kernel=self.use_kernel,
                 warm_from=warm_from,
             )
+            if self.emb_store is not None:
+                self._publish(emb)
             out = None
             if self._prev is not None:
                 a_prev, e_prev = self._prev

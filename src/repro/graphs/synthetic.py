@@ -167,6 +167,9 @@ class SnapshotSequence:
     t_steps: int
     truth: list[np.ndarray]
     components: np.ndarray | None = None
+    # Per-node ground-truth labels (1 = planted outlier), set by the labeled
+    # anomaly mode of gmm_snapshot_sequence -- the ROC-AUC harness's target.
+    labels: np.ndarray | None = None
     _build: Callable[[int], jax.Array] = field(default=None, repr=False)
 
     def snapshots(self) -> Iterator[jax.Array]:
@@ -184,6 +187,23 @@ def _gmm_injection(n: int, seed: int, t: int, inject_p: float) -> np.ndarray:
     return r_sym
 
 
+def _dimmed_similarity_kern(bandwidth: float):
+    """Similarity kernel over (x, y, scale) features: exp(-d/bw) * s_i * s_j.
+
+    The scale column dims a node's whole row AND column of the similarity
+    matrix -- a low-degree node at a perfectly normal position.  Folding the
+    dimming into the kernel keeps the build sharded (build_from_nodes never
+    materializes n x n on the host).
+    """
+
+    def kern(xi, xj):
+        d2 = jnp.sum((xi[:, None, :2] - xj[None, :, :2]) ** 2, -1)
+        sim = jnp.exp(-jnp.sqrt(jnp.maximum(d2, 1e-12)) / bandwidth)
+        return sim * xi[:, None, 2] * xj[None, :, 2]
+
+    return kern
+
+
 def gmm_snapshot_sequence(
     ctx: DistContext,
     n: int,
@@ -194,6 +214,10 @@ def gmm_snapshot_sequence(
     inject_p: float = 0.05,
     inject_steps: set[int] | None = None,
     drift_nodes: int | None = None,
+    anomaly_nodes: int | np.ndarray | None = None,
+    anomaly_scale: float = 12.0,
+    dim_nodes: int = 0,
+    dim_factor: float = 0.05,
     dtype=jnp.float32,
 ) -> SnapshotSequence:
     """T-snapshot GMM sequence: drifting points + per-step edge injections.
@@ -212,12 +236,55 @@ def gmm_snapshot_sequence(
     slowly-drifting regime the incremental delta-chain path
     (:mod:`repro.core.delta_chain`) is built for.  ``None`` (default) keeps
     the historical global drift.
+
+    ``anomaly_nodes`` (a count, or explicit node ids) switches on the
+    *labeled* mode the query-path ROC-AUC harness consumes: the chosen nodes
+    are moved into one tight clump at radius ``anomaly_scale`` (a satellite
+    cluster, tethered to the main mass only through a commute bottleneck --
+    persistent across drift), and the returned sequence carries ``labels``,
+    an (n,) 0/1 ground-truth vector.  ``dim_nodes`` additionally dims that
+    many *normal* nodes' similarity rows/columns by ``dim_factor``
+    (labeled 0): low-degree distractors at perfectly normal positions.  That
+    is the von Luxburg degenerate-regime fixture -- raw commute distance
+    ranks the distractors spuriously high through their 1/deg term, while the
+    corrected scorer subtracts it and keeps only the structural outliers.
     """
     if t_steps < 2:
         raise ValueError("a sequence needs at least 2 snapshots")
     inject_steps = set(range(1, t_steps)) if inject_steps is None else set(inject_steps)
     rng = np.random.default_rng(seed)
     pts0, comp = gmm_points(n, seed)
+
+    labels = None
+    scale = None
+    if anomaly_nodes is not None:
+        if np.ndim(anomaly_nodes) == 0:
+            outliers = rng.choice(n, size=min(int(anomaly_nodes), n), replace=False)
+        else:
+            outliers = np.asarray(anomaly_nodes, np.int64).reshape(-1)
+        labels = np.zeros(n, np.int8)
+        labels[outliers] = 1
+        # Plant the outliers as one tight clump at a common far-out location
+        # (radius ``anomaly_scale``; the GMM means sit at radius ~5.7): a
+        # satellite cluster tethered to the main mass only through a
+        # commute-time bottleneck.  Internal clump edges keep their degrees
+        # near normal, so the anomaly is *structural*, not a degree artifact
+        # -- exactly the signal the von Luxburg correction preserves while it
+        # subtracts out the dimmed distractors below.  (Independently
+        # scattered outliers would be pure low-degree anomalies, and the
+        # correction would erase their signal along with the distractors'.)
+        theta = float(rng.uniform(0, 2 * np.pi))
+        centre = anomaly_scale * np.array([np.cos(theta), np.sin(theta)], np.float32)
+        pts0 = pts0.copy()
+        pts0[outliers] = centre + 0.3 * rng.normal(
+            size=(outliers.size, 2)
+        ).astype(np.float32)
+        scale = np.ones(n, np.float32)
+        if dim_nodes:
+            normal = np.setdiff1d(np.arange(n), outliers)
+            dimmed = rng.choice(normal, size=min(int(dim_nodes), normal.size), replace=False)
+            scale[dimmed] = float(dim_factor)
+
     pts_all = [pts0]
     for _ in range(1, t_steps):
         step = noise * rng.normal(size=pts0.shape).astype(np.float32)
@@ -246,13 +313,21 @@ def gmm_snapshot_sequence(
         truth.append(nodes[np.argsort(-s[nodes])])
 
     def build(t: int) -> jax.Array:
-        a = similarity_graph(ctx, pts_all[t], dtype=dtype)
+        if scale is not None:
+            feats = np.concatenate([pts_all[t], scale[:, None]], axis=1)
+            a = build_from_nodes(
+                ctx, jnp.asarray(feats), _dimmed_similarity_kern(1.0), dtype=dtype
+            )
+        else:
+            a = similarity_graph(ctx, pts_all[t], dtype=dtype)
         if t in inject_steps:
             r_sym = _gmm_injection(n, seed, t, inject_p)
             a = jnp.add(a, ctx.put_matrix(r_sym)).astype(dtype)
         return a
 
-    return SnapshotSequence(t_steps=t_steps, truth=truth, components=comp, _build=build)
+    return SnapshotSequence(
+        t_steps=t_steps, truth=truth, components=comp, labels=labels, _build=build
+    )
 
 
 def climate_snapshot_sequence(

@@ -57,6 +57,14 @@ def main():
                     help="score out-of-core from a tiled snapshot store at DIR")
     ap.add_argument("--store-grid", type=int, default=None,
                     help="tiles per side when creating the store (default: auto)")
+    ap.add_argument("--emb-store", default=None, metavar="DIR",
+                    help="publish each snapshot's committed (Z, vol, deg) "
+                         "embedding into an EmbeddingStore at DIR -- the "
+                         "artifact caddelag-query serves top-k / neighbor "
+                         "reads from without re-running the pipeline")
+    ap.add_argument("--emb-codec", default="raw", choices=["raw", "bf16"],
+                    help="embedding artifact codec (bf16 halves bytes; the "
+                         "query kernel decodes it on-device)")
     ap.add_argument("--oocore-chain", action="store_true",
                     help="run the squaring chain out-of-core: S/T/P spill through a "
                          "TileStore scratch, device residency is panels, not n^2")
@@ -183,8 +191,19 @@ def main():
             print(f"[caddelag] climate grid {side}x{args.n // side}: using n={n_nodes}")
         seq = climate_snapshot_sequence(ctx, side, args.n // side, args.t_steps, sigma=1.0)
 
+    emb_store = None
+    if args.emb_store is not None:
+        from repro.store import EmbeddingStore
+
+        emb_store = EmbeddingStore.create(
+            args.emb_store, n=n_nodes, k=cfg.k_rp(n_nodes),
+            codec=args.emb_codec, seed=cfg.seed,
+            meta={"dataset": args.dataset, "n": n_nodes, "seed": 0},
+        )
+
     det = SequenceDetector(
-        ctx, cfg, top_k=args.top_k, use_kernel=args.use_kernel, donate=args.donate
+        ctx, cfg, top_k=args.top_k, use_kernel=args.use_kernel, donate=args.donate,
+        emb_store=emb_store,
     )
     if args.store is not None:
         from repro.store import TileStore
@@ -231,6 +250,15 @@ def main():
             f"H2D{saved}, peak device panel residency "
             f"{st.peak_live_bytes / 1e6:.2f} MB (vs ~{5 * n_nodes * n_nodes * 4 / 1e6:.2f} MB "
             f"resident chain working set)"
+        )
+
+    if emb_store is not None:
+        print(
+            f"[caddelag] embedding artifacts -> {args.emb_store}: "
+            f"{len(emb_store.embedding_ids)} committed (codec="
+            f"{emb_store.manifest.codec}, panel_rows={emb_store.panel_rows}); "
+            f"serve reads with: caddelag-query --store {args.emb_store} "
+            f"--top-k {args.top_k}"
         )
 
     print(

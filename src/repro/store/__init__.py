@@ -3,6 +3,12 @@
 Public API re-exports.
 """
 
+from repro.store.embstore import (
+    EMB_CODECS,
+    EmbeddingHandle,
+    EmbeddingStore,
+    EmbManifest,
+)
 from repro.store.pipeline import (
     DEFAULT_PREFETCH_DEPTH,
     CachingHandle,
@@ -25,6 +31,10 @@ __all__ = [
     "CODECS",
     "CachingHandle",
     "DEFAULT_PREFETCH_DEPTH",
+    "EMB_CODECS",
+    "EmbManifest",
+    "EmbeddingHandle",
+    "EmbeddingStore",
     "MANIFEST_NAME",
     "PanelPipeline",
     "SnapshotHandle",

@@ -211,3 +211,32 @@ def test_streamed_sequence_retrace_budget(ctx1):
     det.push(next(it))
     assert st.traces == warm_traces
     assert st.misses == warm_misses
+
+
+def test_query_path_retrace_budget(ctx1):
+    """Artifact publishing and repeated queries stay off the retrace path:
+    ``push`` publishes with host numpy only (zero tile programs), and every
+    panel of every query reuses one compiled kernel program (the running
+    top-k state threads through as operands, so shapes never change)."""
+    from repro.core.query import nearest_neighbors, top_anomalies_from_store
+    from repro.store.embstore import EmbeddingStore
+
+    n = 32
+    store = EmbeddingStore.create(
+        None, n=n, k=CFG.k_override, panel_rows=8, seed=CFG.seed
+    )
+    det = SequenceDetector(ctx1, CFG, top_k=5, emb_store=store)
+    det.push(ctx1.put_matrix(_sym(n, 40)))
+    det.push(ctx1.put_matrix(_sym(n, 41)))
+    top_anomalies_from_store(store, 5)  # warm-up: kernel compiles here
+    nearest_neighbors(store, 3, 5)
+    st = program_cache_stats()
+    warm_traces, warm_misses = st.traces, st.misses
+    det.push(ctx1.put_matrix(_sym(n, 42)))
+    det.push(ctx1.put_matrix(_sym(n, 43)))
+    for _ in range(3):
+        top_anomalies_from_store(store, 5)
+        top_anomalies_from_store(store, 5, corrected=True)
+        nearest_neighbors(store, 7, 5)
+    assert st.traces == warm_traces, "query path retraced a tile program"
+    assert st.misses == warm_misses, "query path missed the program cache"
